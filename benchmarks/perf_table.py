@@ -1,0 +1,69 @@
+"""Render the §Perf iteration tables (baseline vs optimized variants)
+from the dry-run artifact — the before/after evidence for EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.roofline_table import load
+
+# (arch, shape) -> ordered iteration variants
+ITERATIONS = {
+    ("xlstm-125m", "train_4k"): [
+        "recurrent-baseline", "mlstm-chunked", "xlstm-opt", "xlstm-opt16",
+        "xlstm-opt32"],
+    ("qwen2-moe-a2.7b", "train_4k"): [
+        "baseline", "expert-parallel", "expert-parallel-v2"],
+    ("mistral-nemo-12b", "decode_32k"): [
+        "decode-repeat-kv", "baseline", "kv-seq-shard"],
+    ("granite-moe-1b-a400m", "train_4k"): ["baseline", "expert-parallel"],
+    ("granite-20b", "decode_32k"): ["baseline", "kv-seq-shard"],
+    ("starcoder2-3b", "decode_32k"): ["baseline", "kv-seq-shard"],
+    ("granite-20b", "train_4k"): ["baseline", "fsdp"],
+}
+
+
+def rows(path: str = "results/dryrun.json") -> List[Dict]:
+    recs = {(r["arch"], r["shape"], r.get("variant", "baseline")): r
+            for r in load(path)
+            if "error" not in r and r.get("mesh") == "16x16"}
+    out = []
+    for (arch, shape), variants in ITERATIONS.items():
+        base_step = None
+        for v in variants:
+            r = recs.get((arch, shape, v))
+            if r is None:
+                continue
+            step = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            if base_step is None:
+                base_step = step
+            out.append({
+                "pair": f"{arch}x{shape}", "variant": v,
+                "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+                "collective_s": r["collective_s"], "step_s": step,
+                "speedup": base_step / step if step else 0.0,
+                "hbm_gb": r.get("hbm_gb_per_device", 0.0),
+            })
+    return out
+
+
+def main(path: str = "results/dryrun.json") -> List[Dict]:
+    table = rows(path)
+    if not table:
+        print("(no dry-run artifact)")
+        return table
+    cur = None
+    for r in table:
+        if r["pair"] != cur:
+            cur = r["pair"]
+            print(f"\n{cur}")
+            print(f"  {'variant':20s} {'compute':>8s} {'memory':>9s} "
+                  f"{'collect':>9s} {'step':>9s} {'vs base':>8s} {'HBM':>6s}")
+        print(f"  {r['variant']:20s} {r['compute_s']:8.3f} {r['memory_s']:9.3f} "
+              f"{r['collective_s']:9.3f} {r['step_s']:9.3f} "
+              f"{r['speedup']:7.2f}x {r['hbm_gb']:5.1f}G")
+    return table
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Render the §Roofline table from the dry-run artifact JSON."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+
+def load(path: str = "results/dryrun.json") -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows(path: str = "results/dryrun.json", mesh: str = "16x16",
+         variant: str = "baseline") -> List[Dict]:
+    out = []
+    for r in load(path):
+        if r.get("mesh") != mesh or r.get("variant", "baseline") != variant:
+            continue
+        if "error" in r:
+            out.append({"name": f"{r['arch']}x{r['shape']}", "error": r["error"]})
+            continue
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        out.append({
+            "name": f"{r['arch']}x{r['shape']}",
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "step_s": step_s,
+            "useful_ratio": r.get("useful_ratio", 0.0),
+            "hbm_gb": r.get("hbm_gb_per_device", 0.0),
+        })
+    return out
+
+
+def main(path: str = "results/dryrun.json"):
+    table = rows(path)
+    if not table:
+        print("(no dry-run artifact at", path, "- run repro.launch.dryrun)")
+        return table
+    print(f"{'arch x shape':45s} {'compute':>9s} {'memory':>9s} "
+          f"{'collect':>9s} {'dominant':>10s} {'useful':>7s} {'HBM GB':>7s}")
+    for r in table:
+        if "error" in r:
+            print(f"{r['name']:45s} ERROR {r['error'][:60]}")
+            continue
+        print(f"{r['name']:45s} {r['compute_s']:9.4f} {r['memory_s']:9.4f} "
+              f"{r['collective_s']:9.4f} {r['dominant']:>10s} "
+              f"{r['useful_ratio']:7.2f} {r['hbm_gb']:7.1f}")
+    return table
+
+
+if __name__ == "__main__":
+    main()

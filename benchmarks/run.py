@@ -1,0 +1,92 @@
+"""Benchmark harness — one entry per paper table / harness deliverable.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus human-readable tables
+on stderr-ish sections). Fast by default; ``--full`` runs the larger
+Table-1 geometry (84x84 Nature CNN) and longer learning runs.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip-learning", action="store_true")
+    args = ap.parse_args(argv)
+
+    rows = []
+
+    # ------------------------------------------------------------------
+    # Table 1-3: speed ablation (std/conc/sync/both x W)
+    # ------------------------------------------------------------------
+    from benchmarks import table1_speed
+    steps = 2000 if args.full else 600
+    fs = 84 if args.full else 10
+    print(f"# Table 1 speed ablation ({steps} steps, frame {fs})",
+          flush=True)
+    t1 = table1_speed.run_table1(steps=steps, frame_size=fs)
+    print(table1_speed.format_tables(t1), flush=True)
+    for r in t1:
+        rows.append((f"table1_{r['variant']}_w{r['threads']}",
+                     r["us_per_step"], f"speedup={r['speedup']:.2f}x"))
+
+    # ------------------------------------------------------------------
+    # Figure 3: transaction scaling
+    # ------------------------------------------------------------------
+    from benchmarks import transactions
+    print("\n# Transaction scaling (sync => independent of W)", flush=True)
+    tx = transactions.main()
+    for r in tx:
+        rows.append((f"transactions_{'sync' if r['synchronized'] else 'std'}"
+                     f"_w{r['threads']}", 0.0,
+                     f"tx_per_step={r['tx_per_step']:.3f}"))
+
+    # ------------------------------------------------------------------
+    # Table 4: learning performance across the env suite
+    # ------------------------------------------------------------------
+    if not args.skip_learning:
+        from benchmarks import table4_learning
+        cycles = 80 if args.full else 40
+        print(f"\n# Table 4 learning proxy ({cycles} cycles/env)", flush=True)
+        t4 = table4_learning.main(cycles=cycles)
+        for r in t4:
+            rows.append((f"table4_{r['env']}", 0.0,
+                         f"norm={r['normalized_pct']:.1f}%"))
+
+    # ------------------------------------------------------------------
+    # Roofline table (from the dry-run artifact)
+    # ------------------------------------------------------------------
+    from benchmarks import roofline_table
+    print("\n# Roofline (single-pod 16x16 baseline, from dry-run)", flush=True)
+    rt = roofline_table.main()
+    for r in rt:
+        if "error" in r:
+            rows.append((f"roofline_{r['name']}", 0.0, "ERROR"))
+        else:
+            rows.append((f"roofline_{r['name']}", r["step_s"] * 1e6,
+                         f"dominant={r['dominant']}"))
+
+    # ------------------------------------------------------------------
+    # §Perf iteration tables (baseline vs optimized variants)
+    # ------------------------------------------------------------------
+    from benchmarks import perf_table
+    print("\n# Perf iterations (dry-run variants; see EXPERIMENTS.md §Perf)",
+          flush=True)
+    pt = perf_table.main()
+    for r in pt:
+        rows.append((f"perf_{r['pair']}_{r['variant']}", r["step_s"] * 1e6,
+                     f"speedup={r['speedup']:.2f}x"))
+
+    # ------------------------------------------------------------------
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Table 1 reproduction: wall-clock runtime of DQN under
+{Standard, Concurrent, Synchronized, Both} x sampler threads {1,2,4,8}.
+
+The paper measures hours for 1M Pong steps on an i7-7700K + GTX 1080; we
+measure seconds for a scaled-down run (HostCatch envs on the host thread,
+jitted Nature-CNN inference/training as the device side) and report the
+same *relative* quantities (Tables 2-3: % of Standard-1 runtime and
+speedup factors). Variants with synchronization need W >= 2 (the paper
+marks W=1 as "—").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+
+from repro.config import DQNConfig
+from repro.configs.dqn_nature import NatureCNNConfig
+from repro.envs import get_env
+from repro.models.nature_cnn import q_forward, q_init
+from repro.core.host_runner import HostDQNRunner, RunResult
+
+VARIANTS = [("standard", False, False), ("concurrent", True, False),
+            ("synchronized", False, True), ("both", True, True)]
+THREADS = (1, 2, 4, 8)
+
+
+def run_table1(steps: int = 2000, frame_size: int = 84,
+               seed: int = 0) -> List[Dict]:
+    spec = get_env("catch")
+    small = frame_size == 10
+    ncfg = NatureCNNConfig(
+        frame_size=frame_size, frame_stack=2 if small else 4,
+        convs=((8, 3, 1),) if small else ((32, 8, 4), (64, 4, 2), (64, 3, 1)),
+        hidden=32 if small else 512, n_actions=spec.n_actions)
+    rows = []
+    for name, conc, sync in VARIANTS:
+        for W in THREADS:
+            if sync and W == 1:
+                continue                     # "—" cells in Table 1
+            dcfg = DQNConfig(minibatch_size=32, replay_capacity=50_000,
+                             target_update_period=max(steps // 8, 64),
+                             train_period=4, n_envs=W,
+                             frame_stack=ncfg.frame_stack)
+            params = q_init(ncfg, spec.n_actions, jax.random.PRNGKey(seed))
+            qf = lambda p, o: q_forward(p, o, ncfg)
+            runner = HostDQNRunner(qf, params, dcfg, concurrent=conc,
+                                   synchronized=sync, n_envs=W,
+                                   frame_size=frame_size, seed=seed)
+            res = runner.run(steps, prepopulate=256)
+            rows.append({"variant": name, "threads": W,
+                         "seconds": res.seconds, "steps": steps,
+                         "us_per_step": res.seconds / steps * 1e6,
+                         "infer_tx": res.inference_transactions,
+                         "update_tx": res.update_transactions})
+    base = next(r for r in rows
+                if r["variant"] == "standard" and r["threads"] == 1)
+    for r in rows:
+        r["pct_of_std1"] = 100.0 * r["seconds"] / base["seconds"]
+        r["speedup"] = base["seconds"] / r["seconds"]
+    return rows
+
+
+def format_tables(rows: List[Dict]) -> str:
+    out = ["Threads | " + " | ".join(v for v, _, _ in VARIANTS)]
+    for W in THREADS:
+        cells = []
+        for name, _, _ in VARIANTS:
+            r = [x for x in rows if x["variant"] == name and x["threads"] == W]
+            cells.append(f"{r[0]['seconds']:6.2f}s ({r[0]['speedup']:.2f}x)"
+                         if r else "   —")
+        out.append(f"{W:7d} | " + " | ".join(cells))
+    return "\n".join(out)
+
+
+def main(steps: int = 2000, frame_size: int = 84):
+    rows = run_table1(steps=steps, frame_size=frame_size)
+    print(format_tables(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Table 4 analogue: learning performance of the fastest configuration
+(Concurrent + Synchronized, W=8) across the JAX environment suite.
+
+The paper reports best ε=0.05 evaluation scores vs Random and Human
+anchors on 49 Atari games; offline we report trained-vs-random returns
+on the 4 pure-JAX pixel envs, normalized the same way the paper
+normalizes (score - random) / (optimal - random) where optimal is the
+best return the env admits (catch/pong/breakout: known; seeker: proxy).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import DQNConfig
+from repro.configs.dqn_nature import NatureCNNConfig
+from repro.envs import get_env
+from repro.models.nature_cnn import q_forward, q_init
+from repro.optim import adamw
+from repro.core.replay import replay_init
+from repro.core.synchronized import evaluate, sampler_init
+from repro.core.concurrent import TrainerCarry, make_concurrent_cycle, prepopulate
+
+FS = 10
+# best-achievable mean returns (optimal play) used for normalization
+OPTIMAL = {"catch": 1.0, "pong": 20.0, "breakout": 15.0, "seeker": 3.0}
+
+
+def train_one(env_name: str, cycles: int = 40,
+              seed: int = 0) -> Dict[str, float]:
+    spec = get_env(env_name)
+    ncfg = NatureCNNConfig(frame_size=FS, frame_stack=2,
+                           convs=((16, 3, 1), (16, 3, 1)), hidden=64,
+                           n_actions=spec.n_actions)
+    dcfg = DQNConfig(minibatch_size=32, replay_capacity=16384,
+                     target_update_period=256, train_period=2,
+                     prepopulate=2048, n_envs=8, frame_stack=2,
+                     eps_anneal_steps=cycles * 128, discount=0.9)
+    key = jax.random.PRNGKey(seed)
+    qf = lambda p, o: q_forward(p, o, ncfg)
+    params = q_init(ncfg, spec.n_actions, key)
+    opt = adamw(1e-3, weight_decay=0.0)
+    replay = replay_init(dcfg.replay_capacity, (FS, FS, 2))
+    sampler = sampler_init(spec, dcfg, key, FS)
+    replay, sampler = jax.jit(
+        lambda r, s: prepopulate(spec, qf, dcfg, r, s, dcfg.prepopulate, FS)
+    )(replay, sampler)
+    cycle = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg, frame_size=FS))
+    ev = jax.jit(lambda p, k: evaluate(spec, qf, p, k, dcfg, n_episodes=64,
+                                       frame_size=FS,
+                                       max_steps=spec.max_steps + 2))
+    carry = TrainerCarry(params, opt.init(params), replay, sampler,
+                         jnp.int32(0))
+    random_score = float(ev(carry.params, key))
+    best = -1e9
+    for i in range(cycles):
+        carry, _ = cycle(carry)
+        if (i + 1) % 10 == 0:                 # periodic eval, keep the best
+            best = max(best, float(ev(carry.params, jax.random.PRNGKey(i))))
+    norm = (best - random_score) / max(OPTIMAL[env_name] - random_score, 1e-9)
+    return {"env": env_name, "random": random_score, "trained": best,
+            "normalized_pct": 100.0 * norm,
+            "steps": int(carry.step)}
+
+
+def main(cycles: int = 40) -> List[Dict]:
+    rows = [train_one(e, cycles) for e in ("catch", "pong", "breakout",
+                                           "seeker")]
+    print(f"{'env':10s} {'random':>8s} {'trained':>8s} {'norm %':>8s}")
+    for r in rows:
+        print(f"{r['env']:10s} {r['random']:8.2f} {r['trained']:8.2f} "
+              f"{r['normalized_pct']:8.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""§4 / Figure 3 claim: with Synchronized Execution the number of device
+(inference) transactions is independent of W; without it, transactions
+scale linearly with the step count regardless of W (one per env step)."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+
+from repro.config import DQNConfig
+from repro.configs.dqn_nature import NatureCNNConfig
+from repro.envs import get_env
+from repro.models.nature_cnn import q_forward, q_init
+from repro.core.host_runner import HostDQNRunner
+
+
+def run_transactions(steps: int = 512) -> List[Dict]:
+    spec = get_env("catch")
+    ncfg = NatureCNNConfig(frame_size=10, frame_stack=2, convs=((8, 3, 1),),
+                           hidden=16, n_actions=spec.n_actions)
+    rows = []
+    for sync in (False, True):
+        for W in (2, 4, 8):
+            dcfg = DQNConfig(minibatch_size=8, replay_capacity=4096,
+                             target_update_period=128, train_period=4,
+                             n_envs=W, frame_stack=2)
+            params = q_init(ncfg, spec.n_actions, jax.random.PRNGKey(0))
+            qf = lambda p, o: q_forward(p, o, ncfg)
+            runner = HostDQNRunner(qf, params, dcfg, concurrent=False,
+                                   synchronized=sync, n_envs=W,
+                                   frame_size=10, seed=0)
+            res = runner.run(steps, prepopulate=64)
+            rows.append({"synchronized": sync, "threads": W,
+                         "steps": steps,
+                         "infer_tx": res.inference_transactions,
+                         "tx_per_step": res.inference_transactions / steps})
+    return rows
+
+
+def main():
+    rows = run_transactions()
+    print("sync | W | infer transactions | per step")
+    for r in rows:
+        print(f"{str(r['synchronized']):5s} | {r['threads']} | "
+              f"{r['infer_tx']:6d} | {r['tx_per_step']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""The paper's technique generalized to an assigned LLM architecture:
+off-policy actor/learner fine-tuning where the actor generates with the
+time-delayed θ⁻ (Concurrent Training) over batched streams (Synchronized
+Execution) while the learner updates θ from a frozen replay snapshot.
+
+  PYTHONPATH=src python examples/actor_learner_llm.py [arch]
+"""
+
+import sys
+import time
+
+import jax
+
+from repro.configs import reduced_config
+from repro.core.actor_learner import ALConfig, make_actor_learner
+from repro.models.layers import ExecConfig
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "starcoder2-3b"
+cfg = reduced_config(arch)
+ec = ExecConfig(compute_dtype="float32", remat=False)
+al = ALConfig(n_streams=8, prompt_len=6, gen_len=12, replay_capacity=128,
+              updates_per_cycle=8, minibatch=16, learning_rate=3e-3,
+              reward_modulus=4)
+init, cycle = make_actor_learner(cfg, ec, al)
+carry = init(jax.random.PRNGKey(0))
+cycle = jax.jit(cycle)
+print(f"actor-learner on {arch} (reduced): reward = fraction of generated "
+      f"tokens in residue class {al.reward_target} (mod {al.reward_modulus})")
+t0 = time.time()
+for i in range(30):
+    carry, m = cycle(carry)
+    if (i + 1) % 5 == 0:
+        print(f"  cycle {i+1:3d}  reward {float(m['reward']):.3f}  "
+              f"loss {float(m['loss']):.3f}  ({time.time()-t0:.0f}s)")
+print("done — reward should trend upward as θ chases the synthetic signal.")

@@ -1,0 +1,21 @@
+"""End-to-end driver: the paper's full pipeline at the Nature-CNN input
+geometry (84x84x4 uint8 frame stacks), training for a few thousand env
+steps and printing periodic ε=0.05 evaluations — the §5.2 protocol on
+the pure-JAX env suite.
+
+  PYTHONPATH=src python examples/atari_dqn.py [--env catch] [--cycles 40]
+"""
+
+import sys
+
+from repro.launch.rl_train import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if "--frame-size" not in " ".join(args):
+        # 84x84x4 conv stacks are heavy on a 1-core CPU host — keep the
+        # demo short; scale --cycles up on real hardware
+        args += ["--frame-size", "84", "--cycles", "8",
+                 "--cycle-steps", "128", "--eval-every", "4",
+                 "--prepopulate", "512", "--envs", "8"]
+    raise SystemExit(main(args))

@@ -1,0 +1,16 @@
+"""Batched serving example: Synchronized Execution's insight applied to
+LLM inference — W request streams share every decode_step device call.
+
+  PYTHONPATH=src python examples/serve_batched.py [--arch zamba2-2.7b]
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in args):
+        args += ["--arch", "zamba2-2.7b"]
+    args += ["--batch", "8", "--prompt-len", "16", "--gen", "48"]
+    raise SystemExit(main(args))

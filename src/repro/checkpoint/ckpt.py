@@ -1,0 +1,72 @@
+"""Sharding-aware .npz checkpointing.
+
+Flattens a pytree to path-keyed arrays; on restore, arrays are placed
+back onto the caller's shardings (``jax.device_put`` with the target
+NamedSharding tree), so a checkpoint written on one mesh restores onto
+another — the standard reshard-on-restore pattern. Writes are atomic
+(tmp + rename) and steps are kept under ``<dir>/step_<n>.npz``.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree: Any, prefix: str = ""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], f"{prefix}{k}{SEP}")
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, f"{prefix}__{i}{SEP}")
+    else:
+        yield prefix.rstrip(SEP), tree
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    arrays = {path: np.asarray(leaf) for path, leaf in _flatten(tree)}
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+    return path
+
+
+def _unflatten_into(template: Any, arrays, prefix: str = ""):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(template[k], arrays, f"{prefix}{k}{SEP}")
+                for k in template}
+    if isinstance(template, (tuple, list)):
+        vals = [_unflatten_into(v, arrays, f"{prefix}__{i}{SEP}")
+                for i, v in enumerate(template)]
+        return type(template)(vals)
+    return arrays[prefix.rstrip(SEP)]
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, template: Any,
+                       shardings: Optional[Any] = None) -> Any:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    with np.load(path) as data:
+        arrays = {k: data[k] for k in data.files}
+    tree = _unflatten_into(template, arrays)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else None

@@ -1,0 +1,22 @@
+"""The paper's own network: the Nature-DQN convolutional Q-network
+(Mnih et al. 2015), consuming 84x84x4 stacked grayscale frames.
+
+Not part of the assigned-architecture pool; used by the DQN reproduction
+(core/, envs/, benchmarks/table1_speed.py).
+"""
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class NatureCNNConfig:
+    frame_size: int = 84
+    frame_stack: int = 4
+    # (out_channels, kernel, stride) per conv layer
+    convs: Tuple[Tuple[int, int, int], ...] = ((32, 8, 4), (64, 4, 2), (64, 3, 1))
+    hidden: int = 512
+    n_actions: int = 18  # full ALE action set upper bound
+
+
+CONFIG = NatureCNNConfig()

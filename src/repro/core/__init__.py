@@ -1,0 +1,7 @@
+"""The paper's primary contribution: Concurrent Training + Synchronized
+Execution for off-policy deep RL, plus the replay memory with
+flush-at-sync staging semantics and the generalized actor-learner."""
+
+from repro.core.replay import (replay_init, replay_add_batch, replay_sample,  # noqa: F401
+                               replay_size)
+from repro.core.dqn import q_loss, egreedy  # noqa: F401

@@ -1,0 +1,96 @@
+"""The paper's baseline: standard sequential DQN control flow.
+
+Per Figure 1a: act with the *current* parameters θ; every F timesteps
+run exactly one minibatch update (blocking the sampler — here, a strict
+dataflow dependency); update θ⁻ ← θ every C timesteps; write each
+experience into 𝒟 immediately. Shares every time-critical component
+(q_forward, replay, ε-greedy, update) with the concurrent runtime, per
+the paper's fair-comparison methodology.
+
+Structured as a scan over F-step groups: F env steps with θ, then one
+update. W>1 without Synchronized Execution is modeled in the host
+runner (benchmarks/table1_speed.py) where per-stream device transactions
+are real; inside one jitted program every variant would be batched
+anyway, so this module fixes W=n_envs with a batched policy but keeps
+the *sequential* sample->train->sample dependency structure.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import DQNConfig
+from repro.core.dqn import make_update_fn
+from repro.core.replay import ReplayState, replay_add_batch, replay_sample
+from repro.core.synchronized import SamplerState, sync_round
+from repro.envs.games import EnvSpec
+from repro.optim.schedule import linear_epsilon
+
+
+class BaselineCarry(NamedTuple):
+    params: Dict
+    target_params: Dict
+    opt_state: Dict
+    replay: ReplayState
+    sampler: SamplerState
+    step: jax.Array
+    group: jax.Array         # F-step-group counter (for the C-period cond)
+
+
+def make_baseline_chunk(spec: EnvSpec, q_forward: Callable, opt,
+                        cfg: DQNConfig, frame_size: int = 84,
+                        chunk_steps: int = 0) -> Callable:
+    """Jitted runner for `chunk_steps` timesteps of standard DQN."""
+    W = cfg.n_envs
+    F = cfg.train_period
+    C = cfg.target_update_period
+    steps = chunk_steps or C
+    assert steps % (F * W) == 0 or steps % F == 0
+    groups = max(steps // F, 1)
+    groups_per_target = max(C // F, 1)
+    update_fn = make_update_fn(q_forward, opt, cfg)
+    eps_fn = linear_epsilon(cfg.eps_start, cfg.eps_end, cfg.eps_anneal_steps)
+
+    rounds_per_group = max(F // W, 1)
+
+    def group_body(carry: BaselineCarry, _):
+        # --- F env steps acting from the CURRENT θ (the sequential lock) --
+        def sample_body(s_replay, i):
+            s, replay = s_replay
+            eps = eps_fn(carry.step + i * W)
+            s, tr = sync_round(spec, q_forward, carry.params, s, eps,
+                               frame_size)
+            # standard DQN: experiences enter 𝒟 immediately
+            flat = {k: v for k, v in tr.items()}
+            replay = replay_add_batch(replay, flat)
+            return (s, replay), tr["reward"]
+
+        (sampler, replay), rewards = jax.lax.scan(
+            sample_body, (carry.sampler, carry.replay),
+            jnp.arange(rounds_per_group))
+
+        # --- one update; the next group's actions depend on its result ---
+        kup = jax.random.fold_in(jax.random.PRNGKey(23), carry.group)
+        batch = replay_sample(replay, kup, cfg.minibatch_size)
+        params, opt_state, loss = update_fn(carry.params, carry.target_params,
+                                            carry.opt_state, batch)
+
+        # --- θ⁻ ← θ every C steps ---
+        group = carry.group + 1
+        sync = (group % groups_per_target) == 0
+        target = jax.tree.map(
+            lambda t, p: jnp.where(sync, p, t), carry.target_params, params)
+
+        new = BaselineCarry(params, target, opt_state, replay, sampler,
+                            carry.step + rounds_per_group * W, group)
+        return new, {"loss": loss, "reward": jnp.sum(rewards)}
+
+    def chunk(carry: BaselineCarry):
+        carry, ms = jax.lax.scan(group_body, carry, None, length=groups)
+        return carry, {k: jnp.mean(v) if k == "loss" else jnp.sum(v)
+                       for k, v in ms.items()}
+
+    return chunk

@@ -1,0 +1,126 @@
+"""Concurrent Training (§3) — the C-cycle.
+
+Algorithm 1 as a single jitted super-step covering C timesteps:
+
+  1. θ⁻ ← θ  (the synchronization point);
+  2. sampler: C/W synchronized rounds acting from **θ⁻** (Concurrent
+     Training's key substitution) — experiences accumulate in the scan's
+     stacked output, the staging buffer;
+  3. trainer: C/F minibatch updates on θ, sampling only from the replay
+     snapshot 𝒟 taken at the cycle boundary;
+  4. flush: staged experiences enter 𝒟.
+
+Steps 2 and 3 have *no dataflow dependency on each other* — θ⁻ and the
+𝒟 snapshot are both fixed at the cycle boundary. That is exactly the
+property the paper exploits with threads; here it lets XLA schedule the
+two computations concurrently, and on a disaggregated mesh they run on
+disjoint device sets (see core/actor_learner.py). Because 𝒟 is frozen
+during the training burst and the flush is ordered, results are
+deterministic — bit-equal to the sequential oracle in
+tests/test_concurrent.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import DQNConfig
+from repro.core.dqn import make_update_fn
+from repro.core.replay import ReplayState, replay_add_batch, replay_sample
+from repro.core.synchronized import SamplerState, sync_round
+from repro.envs.games import EnvSpec
+from repro.optim.schedule import linear_epsilon
+
+
+class TrainerCarry(NamedTuple):
+    params: Dict
+    opt_state: Dict
+    replay: ReplayState
+    sampler: SamplerState
+    step: jax.Array          # global env-step counter t
+
+
+def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
+                          cfg: DQNConfig, frame_size: int = 84,
+                          cycle_steps: int = 0) -> Callable:
+    """Build the jitted C-cycle. ``cycle_steps`` overrides C for tests.
+    Returns cycle(carry) -> (carry', metrics)."""
+    C = cycle_steps or cfg.target_update_period
+    W = cfg.n_envs
+    assert C % W == 0, (C, W)
+    rounds = C // W
+    updates = max(C // cfg.train_period, 1)
+    update_fn = make_update_fn(q_forward, opt, cfg)
+    eps_fn = linear_epsilon(cfg.eps_start, cfg.eps_end, cfg.eps_anneal_steps)
+
+    def cycle(carry: TrainerCarry) -> Tuple[TrainerCarry, Dict[str, jax.Array]]:
+        # --- synchronization point: θ⁻ ← θ; snapshot 𝒟 ---
+        target_params = carry.params
+        replay_snapshot = carry.replay
+
+        # --- sampler: C/W synchronized rounds from θ⁻ ------------------
+        def sample_body(s, i):
+            eps = eps_fn(carry.step + i * W)
+            s, tr = sync_round(spec, q_forward, target_params, s, eps,
+                               frame_size)
+            return s, tr
+
+        sampler, staged = jax.lax.scan(
+            sample_body, carry.sampler, jnp.arange(rounds))
+        # staging buffer: (rounds, W, ...) stacked transitions
+
+        # --- trainer: C/F updates on θ from the frozen snapshot --------
+        ktrain = jax.random.fold_in(jax.random.PRNGKey(17), carry.step)
+
+        def train_body(tc, k):
+            params, opt_state = tc
+            batch = replay_sample(replay_snapshot, k, cfg.minibatch_size)
+            params, opt_state, loss = update_fn(params, target_params,
+                                                opt_state, batch)
+            return (params, opt_state), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            train_body, (carry.params, carry.opt_state),
+            jax.random.split(ktrain, updates))
+
+        # --- flush staged experiences into 𝒟 ---------------------------
+        flat = {k: v.reshape((rounds * W,) + v.shape[2:])
+                for k, v in staged.items()}
+        replay = replay_add_batch(carry.replay, flat)
+
+        metrics = {
+            "loss": jnp.mean(losses),
+            "reward": jnp.sum(staged["reward"]),
+            "episodes": jnp.sum(staged["done"]),
+            "eps": eps_fn(carry.step),
+        }
+        new = TrainerCarry(params, opt_state, replay, sampler,
+                           carry.step + C)
+        return new, metrics
+
+    return cycle
+
+
+def prepopulate(spec: EnvSpec, q_forward: Callable, cfg: DQNConfig,
+                replay: ReplayState, sampler: SamplerState,
+                n: int, frame_size: int = 84):
+    """Fill 𝒟 with n uniform-random transitions (the paper's N=50 000)."""
+    W = cfg.n_envs
+    rounds = max(n // W, 1)
+
+    # ε=1 ⇒ uniform-random actions; Q values are ignored by egreedy, so a
+    # zero-Q function avoids touching (possibly None) params entirely.
+    zero_q = lambda params, obs: jnp.zeros((obs.shape[0], spec.n_actions))
+
+    def body(s, _):
+        s, tr = sync_round(spec, zero_q, None, s, jnp.float32(1.0), frame_size)
+        return s, tr
+
+    sampler, staged = jax.lax.scan(body, sampler, None, length=rounds)
+    flat = {k: v.reshape((rounds * W,) + v.shape[2:]) for k, v in staged.items()}
+    return replay_add_batch(replay, flat), sampler

@@ -1,0 +1,53 @@
+"""DQN algorithm pieces: the loss of Eq. (1), ε-greedy action selection,
+and the gradient update — shared verbatim by the sequential baseline and
+the Concurrent/Synchronized runtime (the paper stresses that all variants
+share time-critical code so measured speedups are attributable to the
+execution framework alone)."""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import DQNConfig
+
+
+def q_loss(params, target_params, batch: Dict[str, jax.Array],
+           q_forward: Callable, discount: float) -> jax.Array:
+    """Eq. (1) with the standard Mnih-style TD-error clipping (Huber):
+    quadratic within [-1, 1], linear outside."""
+    q = q_forward(params, batch["obs"])                          # (B, A)
+    qa = jnp.take_along_axis(q, batch["action"][:, None], axis=1)[:, 0]
+    q_next = q_forward(target_params, batch["next_obs"])
+    bootstrap = jnp.max(q_next, axis=-1)
+    y = batch["reward"] + discount * jnp.where(batch["done"], 0.0, bootstrap)
+    td = jax.lax.stop_gradient(y) - qa
+    huber = jnp.where(jnp.abs(td) <= 1.0, 0.5 * td * td, jnp.abs(td) - 0.5)
+    return jnp.mean(huber)
+
+
+def egreedy(q_values: jax.Array, eps: jax.Array, key: jax.Array) -> jax.Array:
+    """q_values: (W, A) -> actions (W,). One key per call; per-stream
+    randomness derived inside."""
+    W, A = q_values.shape
+    kr, ka = jax.random.split(key)
+    greedy = jnp.argmax(q_values, axis=-1)
+    rand = jax.random.randint(ka, (W,), 0, A)
+    explore = jax.random.uniform(kr, (W,)) < eps
+    return jnp.where(explore, rand, greedy).astype(jnp.int32)
+
+
+def make_update_fn(q_forward: Callable, opt, cfg: DQNConfig):
+    """One minibatch gradient step: (params, target, opt_state, batch) ->
+    (params', opt_state', loss)."""
+    from repro.optim.base import apply_updates
+
+    def update(params, target_params, opt_state, batch):
+        loss, grads = jax.value_and_grad(q_loss)(
+            params, target_params, batch, q_forward, cfg.discount)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+
+    return update

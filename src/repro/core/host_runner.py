@@ -1,0 +1,216 @@
+"""Wall-clock host runner — the Table 1 apparatus.
+
+Reproduces the paper's 14-variant speed ablation with *real* host/device
+heterogeneity on this runtime: environments step in host Python/NumPy
+(the paper's CPU side), while Q-inference and training are jitted XLA
+computations (the paper's GPU side). JAX's async dispatch plays the role
+of the trainer thread: a dispatched update computes on the device's
+execution thread while the host keeps stepping envs.
+
+The four variants map exactly onto the paper's:
+  standard      per-env inference transactions; every F steps one update
+                whose result the policy *waits for* (θ acts);
+  concurrent    θ⁻ acts (device-resident copy), so updates are dispatched
+                fire-and-forget and only awaited at the C boundary;
+                staged experiences flush to replay at the boundary;
+  synchronized  the W envs' states are aggregated into ONE batched
+                inference call per round (transactions ∝ 1/W);
+  both          all of the above — Algorithm 1.
+
+Every variant shares the same jitted update/inference functions, replay
+and env code (the paper's fair-comparison discipline). The runner also
+counts device transactions, reproducing the §4 claim that synchronized
+execution makes the transaction count independent of W.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import DQNConfig
+from repro.envs.host_envs import HostCatch
+from repro.optim import centered_rmsprop
+from repro.core.dqn import make_update_fn
+
+
+@dataclasses.dataclass
+class RunResult:
+    seconds: float
+    steps: int
+    inference_transactions: int
+    update_transactions: int
+
+    @property
+    def steps_per_second(self) -> float:
+        return self.steps / max(self.seconds, 1e-9)
+
+
+class HostDQNRunner:
+    """One ablation variant. ``q_forward(params, obs)`` consumes
+    (B, size, size, stack) uint8 observations."""
+
+    def __init__(self, q_forward, init_params, cfg: DQNConfig, *,
+                 concurrent: bool, synchronized: bool, n_envs: int,
+                 frame_size: int = 84, seed: int = 0):
+        self.cfg = cfg
+        self.concurrent = concurrent
+        self.synchronized = synchronized
+        self.W = n_envs
+        self.size = frame_size
+        self.envs = [HostCatch(seed * 1000 + j) for j in range(n_envs)]
+        self.stacks = np.zeros((n_envs, frame_size, frame_size,
+                                cfg.frame_stack), np.uint8)
+        for j, e in enumerate(self.envs):
+            self._push(j, self._frame(e))
+        self.rng = np.random.RandomState(seed)
+
+        self.params = init_params
+        self.target = jax.tree.map(jnp.copy, init_params)
+        opt = centered_rmsprop(cfg.learning_rate, cfg.rmsprop_decay,
+                               cfg.rmsprop_eps, cfg.rmsprop_centered)
+        self.opt = opt
+        self.opt_state = opt.init(init_params)
+        self._update = jax.jit(make_update_fn(q_forward, opt, cfg))
+        self._infer = jax.jit(lambda p, o: jnp.argmax(q_forward(p, o), axis=-1))
+
+        cap = cfg.replay_capacity
+        self.replay = {
+            "obs": np.zeros((cap, frame_size, frame_size, cfg.frame_stack), np.uint8),
+            "action": np.zeros((cap,), np.int32),
+            "reward": np.zeros((cap,), np.float32),
+            "next_obs": np.zeros((cap, frame_size, frame_size, cfg.frame_stack), np.uint8),
+            "done": np.zeros((cap,), np.bool_),
+        }
+        self.cursor = 0
+        self.rsize = 0
+        self.staging = []
+        self.pending = []          # dispatched-but-unawaited update results
+        self.n_infer = 0
+        self.n_update = 0
+
+    # ------------------------------------------------------------------
+    def _frame(self, env: HostCatch) -> np.ndarray:
+        if self.size == 84:
+            return env.gray84()
+        w = np.linspace(1.0, 0.4, env.channels)
+        return (np.clip(env.render() @ w, 0, 1) * 255).astype(np.uint8)
+
+    def _push(self, j: int, frame: np.ndarray):
+        self.stacks[j, :, :, :-1] = self.stacks[j, :, :, 1:]
+        self.stacks[j, :, :, -1] = frame
+
+    def _replay_add(self, tr):
+        i = self.cursor % self.cfg.replay_capacity
+        for k, v in tr.items():
+            self.replay[k][i] = v
+        self.cursor += 1
+        self.rsize = min(self.rsize + 1, self.cfg.replay_capacity)
+
+    def _sample_batch(self):
+        idx = self.rng.randint(0, max(self.rsize, 1), self.cfg.minibatch_size)
+        return {k: jnp.asarray(v[idx]) for k, v in self.replay.items()}
+
+    # ------------------------------------------------------------------
+    def _act(self, eps: float, js) -> np.ndarray:
+        """ε-greedy actions for env indices js. Synchronized mode issues a
+        single batched device call; standard mode one call per env."""
+        acting_params = self.target if self.concurrent else self.params
+        if self.synchronized:
+            greedy = np.asarray(self._infer(acting_params,
+                                            jnp.asarray(self.stacks[js])))
+            self.n_infer += 1
+        else:
+            greedy = np.empty(len(js), np.int32)
+            for n, j in enumerate(js):
+                greedy[n] = int(self._infer(acting_params,
+                                            jnp.asarray(self.stacks[j][None]))[0])
+                self.n_infer += 1
+        rand = self.rng.randint(0, self.envs[0].n_actions, len(js))
+        explore = self.rng.rand(len(js)) < eps
+        return np.where(explore, rand, greedy).astype(np.int32)
+
+    def _env_step(self, j: int, action: int):
+        obs = self.stacks[j].copy()
+        _, reward, done = self.envs[j].step(int(action))
+        frame = self._frame(self.envs[j])
+        if done:
+            self.stacks[j][:] = 0
+        self._push(j, frame)
+        tr = {"obs": obs, "action": action, "reward": reward,
+              "next_obs": self.stacks[j].copy(), "done": done}
+        if self.concurrent:
+            self.staging.append(tr)      # flush at the C boundary
+        else:
+            self._replay_add(tr)
+
+    def _dispatch_update(self, block: bool):
+        batch = self._sample_batch()
+        self.params, self.opt_state, loss = self._update(
+            self.params, self.target, self.opt_state, batch)
+        self.n_update += 1
+        if block:
+            jax.block_until_ready(self.params)   # the sequential lock
+        else:
+            self.pending.append(loss)            # trainer-thread semantics
+
+    def _sync_boundary(self):
+        """θ⁻ ← θ: await the trainer, flush staging, copy params."""
+        jax.block_until_ready(self.params)
+        self.pending.clear()
+        for tr in self.staging:
+            self._replay_add(tr)
+        self.staging.clear()
+        self.target = jax.tree.map(jnp.copy, self.params)
+
+    # ------------------------------------------------------------------
+    def run(self, total_steps: int, eps: float = 0.1,
+            prepopulate: int = 256) -> RunResult:
+        cfg = self.cfg
+        # prepopulate with random actions (not timed)
+        for t in range(prepopulate):
+            j = t % self.W
+            a = self.rng.randint(0, self.envs[j].n_actions)
+            self._env_step(j, a)
+        if self.concurrent:
+            for tr in self.staging:
+                self._replay_add(tr)
+            self.staging.clear()
+        # warm up compiles (not timed)
+        self._act(eps, list(range(self.W)) if self.synchronized else [0])
+        self._dispatch_update(block=True)
+
+        t0 = time.perf_counter()
+        t = 0
+        while t < total_steps:
+            if self.synchronized:
+                js = list(range(self.W))
+                actions = self._act(eps, js)
+                for j, a in zip(js, actions):
+                    self._env_step(j, a)
+                    t += 1
+                    self._maybe_train(t)
+            else:
+                j = t % self.W
+                a = self._act(eps, [j])[0]
+                self._env_step(j, a)
+                t += 1
+                self._maybe_train(t)
+        jax.block_until_ready(self.params)
+        dt = time.perf_counter() - t0
+        return RunResult(dt, total_steps, self.n_infer, self.n_update)
+
+    def _maybe_train(self, t: int):
+        cfg = self.cfg
+        if t % cfg.train_period == 0:
+            self._dispatch_update(block=not self.concurrent)
+        if t % cfg.target_update_period == 0:
+            if self.concurrent:
+                self._sync_boundary()
+            else:
+                self.target = jax.tree.map(jnp.copy, self.params)

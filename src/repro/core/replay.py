@@ -1,0 +1,65 @@
+"""Replay memory 𝒟 — device-resident ring buffer, pure-functional ops.
+
+Paper semantics reproduced exactly (§3): during a Concurrent-Training
+cycle the trainer samples only from the 𝒟 *snapshot* taken at the cycle
+boundary; experiences collected by the samplers are staged and flushed
+into 𝒟 only at the θ⁻ ← θ synchronization point. In this JAX
+formulation the "staging buffer" is simply the sampler scan's stacked
+output, and the flush is one ``replay_add_batch`` at the end of the
+jitted cycle — 𝒟 is immutable during training *by dataflow construction*,
+which is the determinism guarantee the paper argues for.
+
+Transitions are stored as full (obs, action, reward, next_obs, done)
+records. Storage dtype for observations is uint8 (the paper's 1-byte
+pixel economy).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ReplayState = Dict[str, jax.Array]
+
+
+def replay_init(capacity: int, obs_shape: Tuple[int, ...],
+                obs_dtype=jnp.uint8) -> ReplayState:
+    return {
+        "obs": jnp.zeros((capacity,) + obs_shape, obs_dtype),
+        "action": jnp.zeros((capacity,), jnp.int32),
+        "reward": jnp.zeros((capacity,), jnp.float32),
+        "next_obs": jnp.zeros((capacity,) + obs_shape, obs_dtype),
+        "done": jnp.zeros((capacity,), jnp.bool_),
+        "cursor": jnp.zeros((), jnp.int32),
+        "size": jnp.zeros((), jnp.int32),
+    }
+
+
+def replay_capacity(state: ReplayState) -> int:
+    return state["obs"].shape[0]
+
+
+def replay_size(state: ReplayState) -> jax.Array:
+    return state["size"]
+
+
+def replay_add_batch(state: ReplayState, batch: Dict[str, jax.Array]) -> ReplayState:
+    """Append n transitions (the staging-buffer flush). batch leaves have
+    leading dim n. Wraps modulo capacity; oldest entries overwritten."""
+    cap = replay_capacity(state)
+    n = batch["action"].shape[0]
+    idx = (state["cursor"] + jnp.arange(n, dtype=jnp.int32)) % cap
+    new = dict(state)
+    for k in ("obs", "action", "reward", "next_obs", "done"):
+        new[k] = state[k].at[idx].set(batch[k].astype(state[k].dtype))
+    new["cursor"] = (state["cursor"] + n) % cap
+    new["size"] = jnp.minimum(state["size"] + n, cap)
+    return new
+
+
+def replay_sample(state: ReplayState, key: jax.Array, n: int) -> Dict[str, jax.Array]:
+    """Uniform minibatch with replacement (as in Mnih et al. 2015)."""
+    idx = jax.random.randint(key, (n,), 0, jnp.maximum(state["size"], 1))
+    return {k: state[k][idx] for k in ("obs", "action", "reward", "next_obs", "done")}

@@ -1,0 +1,91 @@
+"""Synchronized Execution (§4 of the paper).
+
+W sampler streams step in lock-step; their observations are aggregated
+into ONE batched Q-inference per round (Figure 3b) instead of W separate
+device transactions (Figure 3a). In this JAX formulation the W streams
+are a vmapped batch dimension and the barrier is the dataflow itself; on
+the production mesh the (W, ...) inference batch is sharded over the
+data/pod axes — the multi-chip generalization of "one shared minibatch".
+
+``sync_round`` is one synchronized step of all W envs: render -> ONE
+batched Q call -> ε-greedy -> vmapped env step. Its scan (see
+concurrent.py) is the sampler loop of Algorithm 1.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import DQNConfig
+from repro.envs.games import EnvSpec, step_autoreset
+from repro.envs.preprocess import (push_frame, render_batch, reset_stack_where)
+from repro.core.dqn import egreedy
+
+
+class SamplerState(NamedTuple):
+    env_states: Dict[str, jax.Array]   # vmapped env states (leading W)
+    stack: jax.Array                   # (W, S, S, K) uint8 — current obs
+    key: jax.Array
+
+
+def sampler_init(spec: EnvSpec, cfg: DQNConfig, key: jax.Array,
+                 frame_size: int = 84) -> SamplerState:
+    kreset, kstate = jax.random.split(key)
+    env_states = jax.vmap(spec.reset)(jax.random.split(kreset, cfg.n_envs))
+    stack = jnp.zeros((cfg.n_envs, frame_size, frame_size, cfg.frame_stack),
+                      jnp.uint8)
+    frame = render_batch(spec, env_states, frame_size)
+    stack = push_frame(stack, frame)
+    return SamplerState(env_states, stack, kstate)
+
+
+def sync_round(spec: EnvSpec, q_forward: Callable, params,
+               s: SamplerState, eps: jax.Array,
+               frame_size: int = 84) -> Tuple[SamplerState, Dict[str, jax.Array]]:
+    """One synchronized W-env step. Returns (state', transitions) where
+    transitions have leading dim W. The single q_forward call is the
+    paper's one-transaction-per-round property."""
+    key, kact, kstep = jax.random.split(s.key, 3)
+    obs = s.stack                                           # (W, S, S, K)
+    qvals = q_forward(params, obs)                          # ONE batched call
+    actions = egreedy(qvals, eps, kact)
+    W = actions.shape[0]
+    env_states, rewards, dones = jax.vmap(
+        lambda st, a, k: step_autoreset(spec, st, a, k)
+    )(s.env_states, actions, jax.random.split(kstep, W))
+    frame = render_batch(spec, env_states, frame_size)
+    next_obs = push_frame(s.stack, frame)                   # pre-reset view
+    new_stack = push_frame(reset_stack_where(s.stack, dones), frame)
+    transitions = {"obs": obs, "action": actions, "reward": rewards,
+                   "next_obs": next_obs, "done": dones}
+    return SamplerState(env_states, new_stack, key), transitions
+
+
+def evaluate(spec: EnvSpec, q_forward: Callable, params, key: jax.Array,
+             cfg: DQNConfig, n_episodes: int = 30, frame_size: int = 84,
+             max_steps: int = 1000) -> jax.Array:
+    """ε=0.05 greedy evaluation (paper §5.2): mean episode return over
+    n_episodes parallel evaluation streams."""
+    eval_cfg = cfg
+    kinit, krun = jax.random.split(key)
+    env_states = jax.vmap(spec.reset)(jax.random.split(kinit, n_episodes))
+    stack = jnp.zeros((n_episodes, frame_size, frame_size, cfg.frame_stack),
+                      jnp.uint8)
+    stack = push_frame(stack, render_batch(spec, env_states, frame_size))
+    s = SamplerState(env_states, stack, krun)
+
+    def body(carry, _):
+        s, ret, live = carry
+        s2, tr = sync_round(spec, q_forward, params, s,
+                            jnp.float32(eval_cfg.eval_eps), frame_size)
+        ret = ret + tr["reward"] * live
+        live = live * (1.0 - tr["done"].astype(jnp.float32))
+        return (s2, ret, live), None
+
+    zeros = jnp.zeros((n_episodes,), jnp.float32)
+    (_, returns, _), _ = jax.lax.scan(body, (s, zeros, zeros + 1.0), None,
+                                      length=max_steps)
+    return jnp.mean(returns)

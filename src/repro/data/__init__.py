@@ -1,0 +1,1 @@
+from repro.data.synthetic import SyntheticLM, lm_batch_specs  # noqa: F401

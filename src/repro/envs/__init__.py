@@ -1,0 +1,1 @@
+from repro.envs.games import ENVS, EnvSpec, get_env  # noqa: F401

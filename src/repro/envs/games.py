@@ -1,0 +1,233 @@
+"""Pure-JAX vectorized environments (MinAtar-style 10x10 grids).
+
+The paper's substrate is ALE/Atari via OpenAI Gym — a C++ emulator that
+cannot ship here. These environments reproduce every *systems* property
+the paper relies on: pixel observations, episodic structure, stochastic
+transitions, CPU-side stepping cost, and batched vectorization across W
+sampler streams. Each env is a pair of pure functions and vmaps cleanly.
+
+API (all pure):
+    spec = get_env("catch")
+    state = spec.reset(key)
+    state, reward, done = spec.step(state, action, key)
+    grid = spec.render(state)            # (size, size, channels) float32
+Auto-reset composition lives in ``step_autoreset``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+SIZE = 10
+State = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvSpec:
+    name: str
+    n_actions: int
+    channels: int
+    max_steps: int
+    reset: Callable[[jax.Array], State]
+    step: Callable[[State, jax.Array, jax.Array], Tuple[State, jax.Array, jax.Array]]
+    render: Callable[[State], jax.Array]
+    size: int = SIZE
+
+
+def _i32(x):
+    return jnp.asarray(x, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Catch: ball falls from the top, 3-action paddle on the bottom row.
+# ---------------------------------------------------------------------------
+
+def _catch_reset(key: jax.Array) -> State:
+    kb, kp = jax.random.split(key)
+    return {
+        "ball_x": jax.random.randint(kb, (), 0, SIZE),
+        "ball_y": _i32(0),
+        "paddle_x": jax.random.randint(kp, (), 0, SIZE),
+        "t": _i32(0),
+    }
+
+
+def _catch_step(s: State, a: jax.Array, key: jax.Array):
+    dx = jnp.array([-1, 0, 1], jnp.int32)[a]
+    paddle = jnp.clip(s["paddle_x"] + dx, 0, SIZE - 1)
+    ball_y = s["ball_y"] + 1
+    done = ball_y >= SIZE - 1
+    caught = jnp.abs(s["ball_x"] - paddle) <= 1
+    reward = jnp.where(done, jnp.where(caught, 1.0, -1.0), 0.0)
+    ns = {"ball_x": s["ball_x"], "ball_y": ball_y, "paddle_x": paddle,
+          "t": s["t"] + 1}
+    return ns, reward.astype(jnp.float32), done
+
+
+def _catch_render(s: State) -> jax.Array:
+    g = jnp.zeros((SIZE, SIZE, 2), jnp.float32)
+    g = g.at[s["ball_y"], s["ball_x"], 0].set(1.0)
+    g = g.at[SIZE - 1, s["paddle_x"], 1].set(1.0)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Breakout: bouncing ball, paddle, 3 brick rows.
+# ---------------------------------------------------------------------------
+
+def _breakout_reset(key: jax.Array) -> State:
+    kx, kd = jax.random.split(key)
+    return {
+        "ball_x": jax.random.randint(kx, (), 0, SIZE),
+        "ball_y": _i32(3),
+        "dx": jax.random.choice(kd, jnp.array([-1, 1], jnp.int32)),
+        "dy": _i32(1),
+        "paddle_x": _i32(SIZE // 2),
+        "bricks": jnp.ones((3, SIZE), jnp.bool_),
+        "t": _i32(0),
+    }
+
+
+def _breakout_step(s: State, a: jax.Array, key: jax.Array):
+    dxa = jnp.array([-1, 0, 1], jnp.int32)[a]
+    paddle = jnp.clip(s["paddle_x"] + dxa, 0, SIZE - 1)
+    # move ball; bounce off side walls
+    nx = s["ball_x"] + s["dx"]
+    dx = jnp.where((nx < 0) | (nx >= SIZE), -s["dx"], s["dx"])
+    nx = jnp.clip(nx, 0, SIZE - 1)
+    ny = s["ball_y"] + s["dy"]
+    dy = jnp.where(ny < 0, -s["dy"], s["dy"])
+    ny_c = jnp.clip(ny, 0, SIZE - 1)
+    # brick hit (rows 1..3)
+    row = ny_c - 1
+    in_bricks = (row >= 0) & (row < 3)
+    hit = in_bricks & s["bricks"][jnp.clip(row, 0, 2), nx]
+    bricks = s["bricks"].at[jnp.clip(row, 0, 2), nx].set(
+        jnp.where(hit, False, s["bricks"][jnp.clip(row, 0, 2), nx]))
+    dy = jnp.where(hit, -dy, dy)
+    reward = jnp.where(hit, 1.0, 0.0)
+    # paddle bounce on bottom row
+    at_bottom = ny_c >= SIZE - 1
+    on_paddle = jnp.abs(nx - paddle) <= 1
+    dy = jnp.where(at_bottom & on_paddle, -jnp.abs(dy), dy)
+    done = (at_bottom & ~on_paddle) | ~jnp.any(bricks) | (s["t"] >= 500)
+    ns = {"ball_x": nx, "ball_y": ny_c, "dx": dx, "dy": dy,
+          "paddle_x": paddle, "bricks": bricks, "t": s["t"] + 1}
+    return ns, reward.astype(jnp.float32), done
+
+
+def _breakout_render(s: State) -> jax.Array:
+    g = jnp.zeros((SIZE, SIZE, 3), jnp.float32)
+    g = g.at[s["ball_y"], s["ball_x"], 0].set(1.0)
+    g = g.at[SIZE - 1, s["paddle_x"], 1].set(1.0)
+    g = g.at[1:4, :, 2].set(s["bricks"].astype(jnp.float32))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Pong (squash): ball bounces off three walls; paddle guards the bottom.
+# ---------------------------------------------------------------------------
+
+def _pong_reset(key: jax.Array) -> State:
+    kx, kd = jax.random.split(key)
+    return {
+        "ball_x": jax.random.randint(kx, (), 1, SIZE - 1),
+        "ball_y": _i32(1),
+        "dx": jax.random.choice(kd, jnp.array([-1, 1], jnp.int32)),
+        "dy": _i32(1),
+        "paddle_x": _i32(SIZE // 2),
+        "t": _i32(0),
+    }
+
+
+def _pong_step(s: State, a: jax.Array, key: jax.Array):
+    dxa = jnp.array([-1, 0, 1], jnp.int32)[a]
+    paddle = jnp.clip(s["paddle_x"] + dxa, 0, SIZE - 1)
+    nx = s["ball_x"] + s["dx"]
+    dx = jnp.where((nx < 0) | (nx >= SIZE), -s["dx"], s["dx"])
+    nx = jnp.clip(nx, 0, SIZE - 1)
+    ny = s["ball_y"] + s["dy"]
+    dy = jnp.where(ny < 0, -s["dy"], s["dy"])
+    ny = jnp.clip(ny, 0, SIZE - 1)
+    at_bottom = ny >= SIZE - 1
+    on_paddle = jnp.abs(nx - paddle) <= 1
+    bounce = at_bottom & on_paddle
+    dy = jnp.where(bounce, -jnp.abs(dy), dy)
+    reward = jnp.where(bounce, 1.0, 0.0)
+    done = (at_bottom & ~on_paddle) | (s["t"] >= 500)
+    ns = {"ball_x": nx, "ball_y": ny, "dx": dx, "dy": dy,
+          "paddle_x": paddle, "t": s["t"] + 1}
+    return ns, reward.astype(jnp.float32), done
+
+
+def _pong_render(s: State) -> jax.Array:
+    g = jnp.zeros((SIZE, SIZE, 2), jnp.float32)
+    g = g.at[s["ball_y"], s["ball_x"], 0].set(1.0)
+    g = g.at[SIZE - 1, s["paddle_x"], 1].set(1.0)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Seeker: navigate to the goal, avoid the random-walking hazard.
+# ---------------------------------------------------------------------------
+
+def _seeker_reset(key: jax.Array) -> State:
+    ka, kg, kh = jax.random.split(key, 3)
+    return {
+        "agent": jax.random.randint(ka, (2,), 0, SIZE),
+        "goal": jax.random.randint(kg, (2,), 0, SIZE),
+        "hazard": jax.random.randint(kh, (2,), 0, SIZE),
+        "t": _i32(0),
+    }
+
+
+_MOVES = jnp.array([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]], jnp.int32)
+
+
+def _seeker_step(s: State, a: jax.Array, key: jax.Array):
+    kh, kg = jax.random.split(key)
+    agent = jnp.clip(s["agent"] + _MOVES[a], 0, SIZE - 1)
+    hz_mv = _MOVES[jax.random.randint(kh, (), 0, 5)]
+    hazard = jnp.clip(s["hazard"] + hz_mv, 0, SIZE - 1)
+    reached = jnp.all(agent == s["goal"])
+    hit = jnp.all(agent == hazard)
+    reward = jnp.where(reached, 1.0, 0.0) - jnp.where(hit, 1.0, 0.0)
+    goal = jnp.where(reached, jax.random.randint(kg, (2,), 0, SIZE), s["goal"])
+    done = hit | (s["t"] >= 200)
+    ns = {"agent": agent, "goal": goal, "hazard": hazard, "t": s["t"] + 1}
+    return ns, reward.astype(jnp.float32), done
+
+
+def _seeker_render(s: State) -> jax.Array:
+    g = jnp.zeros((SIZE, SIZE, 3), jnp.float32)
+    g = g.at[s["agent"][0], s["agent"][1], 0].set(1.0)
+    g = g.at[s["goal"][0], s["goal"][1], 1].set(1.0)
+    g = g.at[s["hazard"][0], s["hazard"][1], 2].set(1.0)
+    return g
+
+
+ENVS: Dict[str, EnvSpec] = {
+    "catch": EnvSpec("catch", 3, 2, 20, _catch_reset, _catch_step, _catch_render),
+    "breakout": EnvSpec("breakout", 3, 3, 500, _breakout_reset, _breakout_step, _breakout_render),
+    "pong": EnvSpec("pong", 3, 2, 500, _pong_reset, _pong_step, _pong_render),
+    "seeker": EnvSpec("seeker", 5, 3, 200, _seeker_reset, _seeker_step, _seeker_render),
+}
+
+
+def get_env(name: str) -> EnvSpec:
+    return ENVS[name]
+
+
+def step_autoreset(spec: EnvSpec, state: State, action: jax.Array,
+                   key: jax.Array):
+    """Step; on done, the next state is a fresh reset (standard vector-env
+    semantics: the returned reward/done describe the finished episode)."""
+    kstep, kreset = jax.random.split(key)
+    ns, reward, done = spec.step(state, action, kstep)
+    fresh = spec.reset(kreset)
+    ns = jax.tree.map(lambda a, b: jnp.where(done, b, a), ns, fresh)
+    return ns, reward, done

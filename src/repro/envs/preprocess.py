@@ -1,0 +1,56 @@
+"""Observation preprocessing: the paper's CPU-side pipeline.
+
+Mnih et al. preprocess 210x160 RGB Atari frames to 84x84 grayscale and
+stack 4. Our envs emit (10, 10, C) grids; ``to_frame84`` collapses
+channels to a grayscale intensity and nearest-neighbour-upscales onto an
+84x84 uint8 canvas, reproducing the exact tensor the Nature CNN consumes
+(and the 1-byte/pixel host->device transfer the paper's bus analysis
+assumes). ``to_frame10`` is the compact variant used by fast tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.games import EnvSpec
+
+
+def grid_to_gray(grid: jax.Array) -> jax.Array:
+    """(S, S, C) float -> (S, S) float in [0,1]: channel-weighted blend."""
+    C = grid.shape[-1]
+    w = jnp.linspace(1.0, 0.4, C)
+    return jnp.clip(jnp.einsum("ijc,c->ij", grid, w), 0.0, 1.0)
+
+
+def to_frame84(grid: jax.Array) -> jax.Array:
+    """(10, 10, C) -> (84, 84) uint8 (8x nearest upscale + 2px border)."""
+    gray = grid_to_gray(grid)
+    up = jnp.kron(gray, jnp.ones((8, 8), gray.dtype))       # (80, 80)
+    up = jnp.pad(up, ((2, 2), (2, 2)))
+    return (up * 255.0).astype(jnp.uint8)
+
+
+def to_frame10(grid: jax.Array) -> jax.Array:
+    """(10, 10, C) -> (10, 10) uint8 — compact path for unit tests."""
+    return (grid_to_gray(grid) * 255.0).astype(jnp.uint8)
+
+
+def init_frame_stack(batch: int, size: int, stack: int) -> jax.Array:
+    return jnp.zeros((batch, size, size, stack), jnp.uint8)
+
+
+def push_frame(stack: jax.Array, frame: jax.Array) -> jax.Array:
+    """stack: (B, S, S, K); frame: (B, S, S). Newest frame last."""
+    return jnp.concatenate([stack[..., 1:], frame[..., None]], axis=-1)
+
+
+def reset_stack_where(stack: jax.Array, done: jax.Array) -> jax.Array:
+    """Zero the history of streams whose episode just ended."""
+    return jnp.where(done[:, None, None, None], jnp.zeros_like(stack), stack)
+
+
+def render_batch(spec: EnvSpec, states, size: int = 84) -> jax.Array:
+    """Vectorized render of W env states -> (W, size, size) uint8."""
+    conv = to_frame84 if size == 84 else to_frame10
+    return jax.vmap(lambda s: conv(spec.render(s)))(states)

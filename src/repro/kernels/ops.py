@@ -1,0 +1,168 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities:
+  * model-layout <-> kernel-layout transposes (models use (B, S, H, D);
+    kernels use (B, H, S, D));
+  * head-dim padding to the 128-lane MXU width (the softmax scale is
+    computed from the true head dim, so padding never changes the math);
+  * differentiability: each op is a ``jax.custom_vjp`` whose forward runs
+    the Pallas kernel and whose backward recomputes with the pure-jnp
+    reference (`ref.py`) under ``jax.vjp`` — flash-style recompute rather
+    than stored attention matrices;
+  * the ``interpret`` switch used to validate on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.decode_attention import decode_attention_kernel
+from repro.kernels.ssm_scan import ssm_scan_kernel
+from repro.kernels.rmsnorm import rmsnorm_kernel
+from repro.kernels.slstm_scan import slstm_scan_kernel
+
+
+def _pad_last(x: jax.Array, to: int) -> jax.Array:
+    d = x.shape[-1]
+    if d % to == 0:
+        return x
+    pad = to - d % to
+    cfgs = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, cfgs)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (model layout: q (B,S,H,D), k/v (B,S,Hkv,D))
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
+                    interpret: bool = False, block: int = 128):
+    return _flash_fwd_impl(q, k, v, causal, window, interpret, block)
+
+
+def _flash_fwd_impl(q, k, v, causal, window, interpret, block):
+    B, S, H, D = q.shape
+    scale = D ** -0.5
+    qk = _pad_last(q.transpose(0, 2, 1, 3), 128)
+    kk = _pad_last(k.transpose(0, 2, 1, 3), 128)
+    vk = _pad_last(v.transpose(0, 2, 1, 3), 128)
+    bq = bk = min(block, S)
+    o = flash_attention_kernel(qk, kk, vk, causal=causal, window=window,
+                               bq=bq, bk=bk, scale=scale, interpret=interpret)
+    return o[..., :D].transpose(0, 2, 1, 3)
+
+
+def _flash_ref(q, k, v, causal, window):
+    o = ref.flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=causal, window=window)
+    return o.transpose(0, 2, 1, 3)
+
+
+def _flash_fwd(q, k, v, causal, window, interpret, block):
+    return _flash_fwd_impl(q, k, v, causal, window, interpret, block), (q, k, v)
+
+
+def _flash_bwd(causal, window, interpret, block, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: _flash_ref(q, k, v, causal, window), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (model layout: q (B,1,H,D), caches (B,Hkv,L,D))
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, cache_len, interpret: bool = False,
+                     block: int = 256):
+    B, _, H, D = q.shape
+    scale = D ** -0.5
+    qk = _pad_last(q[:, 0].reshape(B, H, D), 128)
+    kk = _pad_last(k_cache, 128)
+    vk = _pad_last(v_cache, 128)
+    L = k_cache.shape[2]
+    bl = min(block, L)
+    while L % bl:
+        bl //= 2
+    o = decode_attention_kernel(qk, kk, vk, jnp.asarray(cache_len), bl=bl,
+                                scale=scale, interpret=interpret)
+    return o[..., :D][:, None]                        # (B, 1, H, D)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan (model layout: x (B,S,H,P), dt (B,S,H), Bm/Cm (B,S,N))
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def ssm_scan(x, dt, A, Bm, Cm, chunk: int = 128, interpret: bool = False):
+    y, h = _ssm_fwd_impl(x, dt, A, Bm, Cm, chunk, interpret)
+    return y, h
+
+
+def _ssm_fwd_impl(x, dt, A, Bm, Cm, chunk, interpret):
+    xk = x.transpose(0, 2, 1, 3)                      # (B,H,S,P)
+    dtk = dt.transpose(0, 2, 1)                       # (B,H,S)
+    y, h = ssm_scan_kernel(xk, dtk, A, Bm, Cm, chunk=chunk, interpret=interpret)
+    return y.transpose(0, 2, 1, 3), h                 # (B,S,H,P)
+
+
+def _ssm_ref(x, dt, A, Bm, Cm):
+    y, h = ref.ssm_scan(x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1), A, Bm, Cm)
+    return y.transpose(0, 2, 1, 3), h
+
+
+def _ssm_fwd(x, dt, A, Bm, Cm, chunk, interpret):
+    return _ssm_fwd_impl(x, dt, A, Bm, Cm, chunk, interpret), (x, dt, A, Bm, Cm)
+
+
+def _ssm_bwd(chunk, interpret, res, g):
+    x, dt, A, Bm, Cm = res
+    _, vjp = jax.vjp(lambda *a: _ssm_ref(*a), x, dt, A, Bm, Cm)
+    return vjp(g)
+
+
+ssm_scan.defvjp(_ssm_fwd, _ssm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM scan (VMEM-resident recurrent weights)
+# ---------------------------------------------------------------------------
+
+def slstm_scan(wx, R, b, state, n_heads: int, chunk: int = 16,
+               interpret: bool = False):
+    """wx: (B, S, 4d); R: (4, H, Pd, Pd); b: (4d,); state: 4x(B, d) f32.
+    Forward-only (serving / frozen-actor path); training uses the XLA
+    scan with unroll (ExecConfig.slstm_unroll)."""
+    return slstm_scan_kernel(wx, R, b, state, n_heads=n_heads, chunk=chunk,
+                             interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def rmsnorm(x, gamma, eps: float = 1e-5, interpret: bool = False):
+    return rmsnorm_kernel(x, gamma, eps=eps, interpret=interpret)
+
+
+def _rms_fwd(x, gamma, eps, interpret):
+    return rmsnorm_kernel(x, gamma, eps=eps, interpret=interpret), (x, gamma)
+
+
+def _rms_bwd(eps, interpret, res, g):
+    x, gamma = res
+    _, vjp = jax.vjp(lambda x, gamma: ref.rmsnorm(x, gamma, eps), x, gamma)
+    return vjp(g)
+
+
+rmsnorm.defvjp(_rms_fwd, _rms_bwd)

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantics contract: tests sweep shapes/dtypes and
+``assert_allclose`` kernel-vs-ref; ``ops.py`` also uses them as the
+recompute body for the custom-vjp backward passes.
+
+Layouts (kernel-native):
+  flash_attention: q (B, H, S, D), k/v (B, Hkv, S, D)   -> (B, H, S, D)
+  decode_attention: q (B, H, D), k/v (B, Hkv, L, D)     -> (B, H, D)
+  ssm_scan: x (B, H, S, P), dt (B, H, S), A (H,), Bm/Cm (B, S, N)
+  rmsnorm: x (..., D), gamma (D,)
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None) -> jax.Array:
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=1)
+        v = jnp.repeat(v, H // Hkv, axis=1)
+    scale = D ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jax.lax.broadcasted_iota(jnp.int32, (S, S), 0)
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (S, S), 1)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def decode_attention(q, k, v, cache_len) -> jax.Array:
+    B, H, D = q.shape
+    Hkv, L = k.shape[1], k.shape[2]
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=1)
+        v = jnp.repeat(v, H // Hkv, axis=1)
+    scale = D ** -0.5
+    s = jnp.einsum("bhd,bhld->bhl", q, k).astype(jnp.float32) * scale
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, L), 2)
+    s = jnp.where(pos < jnp.minimum(cache_len, L), s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhl,bhld->bhd", p, v)
+
+
+def ssm_scan(x, dt, A, Bm, Cm):
+    """Naive sequential SSD recurrence — the ground truth.
+    x: (B,H,S,P); dt: (B,H,S); A: (H,); Bm/Cm: (B,S,N).
+    Returns y (B,H,S,P), final state (B,H,P,N)."""
+    B, H, S, P = x.shape
+    N = Bm.shape[-1]
+    x32, dt32 = x.astype(jnp.float32), dt.astype(jnp.float32)
+    B32, C32 = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+    def body(h, t):
+        decay = jnp.exp(dt32[:, :, t] * A[None, :])                 # (B,H)
+        h = h * decay[:, :, None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt32[:, :, t], B32[:, t], x32[:, :, t])
+        y = jnp.einsum("bn,bhpn->bhp", C32[:, t], h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h, ys = jax.lax.scan(body, h0, jnp.arange(S))
+    return ys.transpose(1, 2, 0, 3).astype(x.dtype), h
+
+
+def rmsnorm(x, gamma, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)

@@ -1,0 +1,50 @@
+"""Fused RMSNorm — Pallas TPU kernel.
+
+Grid over row blocks; each step normalizes (block_rows, D) in one fused
+VPU pass (mean-square, rsqrt, scale) instead of XLA's multi-kernel
+reduce + mul chain. D is kept whole per block (norm is a row reduction);
+VMEM per step at block_rows=256, D=8192, bf16: 4 MiB in + 4 MiB out.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * g_ref[...].astype(jnp.float32)
+                  ).astype(o_ref.dtype)
+
+
+def rmsnorm_kernel(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-5,
+                   block_rows: int = 256, interpret: bool = False) -> jax.Array:
+    """x: (..., D) -> same shape. Rows are processed in blocks."""
+    orig_shape = x.shape
+    D = x.shape[-1]
+    rows = 1
+    for s in x.shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, D)
+    br = min(block_rows, rows)
+    while rows % br:
+        br -= 1
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, D), x.dtype),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x2, gamma)
+    return out.reshape(orig_shape)

@@ -1,0 +1,80 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's
+"no allocation" contract. One function per workload kind; shardable,
+weak-type-correct, and shaped exactly as the real pipeline produces.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.models.layers import ExecConfig
+from repro.launch.steps import abstract_cache
+
+
+def needs_memory(cfg: ModelConfig) -> bool:
+    return cfg.has_cross_attention
+
+
+def memory_spec(cfg: ModelConfig, batch: int) -> jax.ShapeDtypeStruct:
+    """The stubbed modality frontend's output: patch embeddings (VLM) or
+    mel-frame embeddings pre-encoder (audio)."""
+    if cfg.is_encoder_decoder:
+        m = cfg.cross_memory_len          # post-conv frames
+    else:
+        m = cfg.vision_tokens
+    return jax.ShapeDtypeStruct((batch, m, cfg.d_model), jnp.float32)
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+    }
+    if needs_memory(cfg):
+        specs["memory"] = memory_spec(cfg, B)
+    return specs
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if needs_memory(cfg):
+        specs["memory"] = memory_spec(cfg, B)
+    return specs
+
+
+def decode_cache_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """decode_32k keeps the full 32k KV cache; long_500k uses the
+    sliding-window ring buffer (the sub-quadratic variant) — SSM/xLSTM
+    blocks have O(1) state either way."""
+    if shape.seq_len > 100_000:
+        return cfg.sliding_window
+    return shape.seq_len
+
+
+def decode_is_ring(shape: ShapeConfig) -> bool:
+    return shape.seq_len > 100_000
+
+
+def serve_specs(cfg: ModelConfig, ec: ExecConfig,
+                shape: ShapeConfig) -> Dict[str, Any]:
+    B = shape.global_batch
+    cache = abstract_cache(cfg, ec, B, decode_cache_len(cfg, shape),
+                           decode_is_ring(shape))
+    return {"cache": cache,
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, ec: ExecConfig, shape_name: str) -> Dict[str, Any]:
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    return serve_specs(cfg, ec, shape)

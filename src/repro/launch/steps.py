@@ -1,0 +1,82 @@
+"""Step functions lowered by the launchers and the dry-run.
+
+  train_step    full fwd+bwd+AdamW update          (train_4k)
+  prefill_step  full forward, last-position logits (prefill_32k)
+  serve_step    one-token decode + greedy sample   (decode_32k, long_500k)
+
+All are pure; parameters/optimizer state/caches are explicit arguments so
+the dry-run can lower them from ShapeDtypeStructs without allocation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.models import transformer as T
+from repro.models.layers import ExecConfig, softmax_cross_entropy
+from repro.optim import adamw, warmup_cosine
+from repro.optim.base import apply_updates
+
+
+def make_optimizer(tc: TrainConfig, total_steps: int = 10_000):
+    lr = warmup_cosine(tc.learning_rate, tc.warmup_steps, total_steps)
+    return adamw(lr, tc.beta1, tc.beta2, weight_decay=tc.weight_decay,
+                 grad_clip=tc.grad_clip)
+
+
+def make_train_step(cfg: ModelConfig, ec: ExecConfig, tc: TrainConfig):
+    opt = make_optimizer(tc)
+
+    def loss_fn(params, batch):
+        logits, aux = T.forward(cfg, ec, params, batch["tokens"],
+                                batch.get("memory"))
+        ce = softmax_cross_entropy(logits, batch["labels"], cfg.vocab,
+                                   batch["mask"])
+        return ce + aux, ce
+
+    def train_step(params, opt_state, batch):
+        (loss, ce), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, "ce": ce}
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ModelConfig, ec: ExecConfig):
+    def prefill_step(params, batch):
+        logits, _ = T.forward(cfg, ec, params, batch["tokens"],
+                              batch.get("memory"))
+        return logits[:, -1, : cfg.vocab]
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, ec: ExecConfig, ring: bool = False):
+    """One new token against the cache: (params, cache, tokens (B,1)) ->
+    (next_token (B,1), cache)."""
+    def serve_step(params, cache, tokens):
+        logits, cache = T.decode_step(cfg, ec, params, cache, tokens,
+                                      ring=ring)
+        nxt = jnp.argmax(logits[:, :, : cfg.vocab], axis=-1).astype(jnp.int32)
+        return nxt, cache
+    return serve_step
+
+
+def abstract_train_state(cfg: ModelConfig, ec: ExecConfig, tc: TrainConfig):
+    """(params, opt_state) as ShapeDtypeStructs — no allocation."""
+    params = T.abstract_params(cfg, ec)
+    opt = make_optimizer(tc)
+    opt_state = jax.eval_shape(opt.init, params)
+    return params, opt_state
+
+
+def abstract_cache(cfg: ModelConfig, ec: ExecConfig, batch: int,
+                   cache_len: int, ring: bool):
+    return jax.eval_shape(
+        functools.partial(T.init_cache, cfg, ec, batch, cache_len, ring))

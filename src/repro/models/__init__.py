@@ -1,0 +1,1 @@
+from repro.models.layers import ExecConfig, DEFAULT_EXEC  # noqa: F401

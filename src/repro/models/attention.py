@@ -1,0 +1,157 @@
+"""GQA attention: blocked-XLA implementation, Pallas dispatch, KV caches.
+
+Layouts: q (B, S, H, D); k/v (B, S, Hkv, D); caches (B, Hkv, L, D).
+
+Sharding notes (see sharding/rules.py): q heads shard over the `model`
+mesh axis when divisible; KV heads are replicated when n_kv_heads is not
+divisible (e.g. granite-20b's MQA kv=1) and KV is repeated to the q-head
+count *after* sharding so each model shard touches only its own group.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ExecConfig, DEFAULT_EXEC
+
+NEG_INF = -1e30
+
+
+def repeat_kv(kv: jax.Array, n_heads: int, head_axis: int) -> jax.Array:
+    n_kv = kv.shape[head_axis]
+    if n_kv == n_heads:
+        return kv
+    return jnp.repeat(kv, n_heads // n_kv, axis=head_axis)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence (training / prefill) causal attention
+# ---------------------------------------------------------------------------
+
+def _dense_causal(q, k, v, scale, window: Optional[int]) -> jax.Array:
+    """One-shot attention; used for short sequences and as the oracle."""
+    B, S, H, D = q.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jax.lax.broadcasted_iota(jnp.int32, (S, S), 0)
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (S, S), 1)
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _blocked_causal(q, k, v, scale, block_q: int, window: Optional[int]) -> jax.Array:
+    """lax.scan over q-blocks: memory O(block_q * S) instead of O(S^2).
+
+    This is the XLA-side analogue of flash attention's outer loop; the
+    Pallas kernel (kernels/flash_attention.py) additionally tiles K/V
+    through VMEM.
+    """
+    B, S, H, D = q.shape
+    nblk = S // block_q
+    qb = q.reshape(B, nblk, block_q, H, D).transpose(1, 0, 2, 3, 4)
+
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (1, S), 1)
+
+    def body(carry, xs):
+        i, qblk = xs
+        qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qblk, k).astype(jnp.float32) * scale
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return carry, jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+    _, ob = jax.lax.scan(body, 0, (jnp.arange(nblk), qb))
+    return ob.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)
+
+
+def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     ec: ExecConfig = DEFAULT_EXEC,
+                     window: Optional[int] = None) -> jax.Array:
+    """Causal self-attention with GQA; dispatches to Pallas when enabled."""
+    B, S, H, D = q.shape
+    scale = D ** -0.5
+    if ec.use_pallas:
+        from repro.kernels import ops
+        return ops.flash_attention(q, k, v, causal=True, window=window,
+                                   interpret=ec.interpret)
+    k = repeat_kv(k, H, 2)
+    v = repeat_kv(v, H, 2)
+    if S <= max(ec.block_q, 1024) or S % ec.block_q != 0:
+        return _dense_causal(q, k, v, scale, window)
+    return _blocked_causal(q, k, v, scale, ec.block_q, window)
+
+
+def bidirectional_attention(q, k, v, ec: ExecConfig = DEFAULT_EXEC) -> jax.Array:
+    """Non-causal attention (whisper encoder, cross-attention)."""
+    B, Sq, H, D = q.shape
+    k = repeat_kv(k, H, 2)
+    v = repeat_kv(v, H, 2)
+    scale = D ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode-step attention against a KV cache
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, ec: ExecConfig = DEFAULT_EXEC,
+                     ring: bool = False) -> jax.Array:
+    """q: (B, 1, H, D); caches: (B, Hkv, L, D); cache_len: () int32 count of
+    valid entries. ``ring=True`` means the cache is a sliding-window ring
+    buffer — every slot < min(cache_len, L) is valid (order is irrelevant
+    to attention)."""
+    B, _, H, D = q.shape
+    Hkv, L = k_cache.shape[1], k_cache.shape[2]
+    scale = D ** -0.5
+    if ec.use_pallas:
+        from repro.kernels import ops
+        return ops.decode_attention(q, k_cache, v_cache, cache_len,
+                                    interpret=ec.interpret)
+    if not getattr(ec, "decode_grouped", True):
+        # paper-era baseline path: materialize the KV repeat to q heads
+        kc = repeat_kv(k_cache, H, 1)                  # (B, H, L, D)
+        vc = repeat_kv(v_cache, H, 1)
+        scores = jnp.einsum("bohd,bhld->bhl", q, kc).astype(jnp.float32) * scale
+        pos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, L), 2)
+        valid = pos < jnp.minimum(cache_len, L)
+        scores = jnp.where(valid, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhl,bhld->bhd", probs, vc)[:, None]
+    # grouped GQA: never materialize the KV repeat (a multi-GB/step HBM
+    # mistake at mistral-nemo decode_32k scale; see EXPERIMENTS.md §Perf)
+    G = H // Hkv
+    qg = q[:, 0].reshape(B, Hkv, G, D)
+    scores = jnp.einsum("bkgd,bkld->bkgl", qg, k_cache)
+    scores = scores.astype(jnp.float32) * scale
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, L), 3)
+    valid = pos < jnp.minimum(cache_len, L)
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgl,bkld->bkgd", probs, v_cache)
+    return out.reshape(B, 1, H, D)                     # (B, 1, H, D)
+
+
+def cache_update(k_cache: jax.Array, v_cache: jax.Array,
+                 k_new: jax.Array, v_new: jax.Array,
+                 pos: jax.Array, ring: bool) -> Tuple[jax.Array, jax.Array]:
+    """Insert one step's K/V (B, 1, Hkv, D) at absolute position ``pos``.
+    Ring caches wrap modulo the window length."""
+    L = k_cache.shape[2]
+    slot = pos % L if ring else jnp.minimum(pos, L - 1)
+    k_new = k_new.transpose(0, 2, 1, 3)                # (B, Hkv, 1, D)
+    v_new = v_new.transpose(0, 2, 1, 3)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), slot, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), slot, axis=2)
+    return k_cache, v_cache

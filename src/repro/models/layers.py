@@ -1,0 +1,116 @@
+"""Shared pure-JAX layer math: norms, RoPE, MLPs, losses, exec config."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecConfig:
+    """Execution-strategy knobs, orthogonal to the architecture."""
+
+    use_pallas: bool = False      # Pallas kernels for attention / SSM scan
+    interpret: bool = False       # Pallas interpret mode (CPU validation)
+    compute_dtype: str = "bfloat16"
+    remat: bool = False           # activation-checkpoint the superblock scan
+    block_q: int = 512            # q-block for the blocked-XLA attention
+    vocab_pad: int = 256          # pad vocab to a multiple (shardability)
+    # MoE dispatch: "scatter" (capacity buffers, baseline), "expert_parallel"
+    # (shard_map over the model axis, §Perf optimized) or "dense" (oracle)
+    moe_impl: str = "scatter"
+    fsdp: bool = False            # shard params/opt-state over the data axis
+    # shard decode KV caches over the model axis along the sequence dim
+    # (flash-decoding style partition; §Perf decode optimization)
+    kv_seq_shard: bool = False
+    # sLSTM scan unrolling: amortizes the recurrent-weight HBM reads over
+    # k timesteps per loop iteration (§Perf xlstm iteration 2)
+    slstm_unroll: int = 1
+    # mLSTM formulation: chunkwise-parallel (optimized) vs per-token
+    # recurrence (the paper-faithful baseline; §Perf xlstm iteration 1)
+    mlstm_chunked: bool = True
+    # decode attention: grouped GQA einsum (optimized) vs materialized
+    # KV-repeat (baseline; §Perf decode iteration)
+    decode_grouped: bool = True
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+DEFAULT_EXEC = ExecConfig()
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> jax.Array:
+    """(..., head_dim//2) rotation angles for integer positions."""
+    freqs = theta ** (-np.arange(0, head_dim, 2, dtype=np.float32) / head_dim)
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,) absolute token positions."""
+    d = x.shape[-1]
+    ang = rope_angles(positions, d, theta)           # (B,S,D/2) or (S,D/2)
+    if ang.ndim == 2:
+        ang = ang[None]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    dt = x.dtype
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(dt))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(dt))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down.astype(dt))
+
+
+def gelu_mlp(x: jax.Array, w_up: jax.Array, b_up, w_down: jax.Array, b_down) -> jax.Array:
+    dt = x.dtype
+    h = jnp.einsum("...d,df->...f", x, w_up.astype(dt)) + b_up.astype(dt)
+    h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, w_down.astype(dt)) + b_down.astype(dt)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          vocab: int, mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE. ``logits`` may be vocab-padded; padded entries are
+    masked to -inf so the softmax normalizer ignores them."""
+    vpad = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vpad != vocab:
+        pad_mask = jax.lax.broadcasted_iota(jnp.int32, (vpad,), 0) >= vocab
+        logits = jnp.where(pad_mask, -1e9, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def sinusoidal_positions(n: int, d: int) -> np.ndarray:
+    """Fixed sinusoidal position table (whisper encoder)."""
+    pos = np.arange(n, dtype=np.float32)[:, None]
+    dim = np.arange(0, d, 2, dtype=np.float32)[None, :]
+    ang = pos / np.power(10000.0, dim / d)
+    out = np.zeros((n, d), dtype=np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out

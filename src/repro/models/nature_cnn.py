@@ -1,0 +1,53 @@
+"""The Nature-DQN convolutional Q-network (Mnih et al. 2015) — the paper's
+own model. Pure JAX (lax.conv); XLA maps convs onto the MXU directly.
+
+Input: (B, 84, 84, frame_stack) uint8 frames, scaled to [0, 1] on device
+(the paper's CPU-side preprocessing produces uint8; scaling on device
+keeps host->device transfers at 1 byte/pixel — part of the paper's
+bus-saturation story)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.dqn_nature import NatureCNNConfig
+from repro.models import params as P
+
+
+def q_param_spec(cfg: NatureCNNConfig, n_actions: int) -> Dict[str, Any]:
+    spec: Dict[str, Any] = {}
+    in_ch = cfg.frame_stack
+    size = cfg.frame_size
+    for i, (out_ch, k, s) in enumerate(cfg.convs):
+        spec[f"conv{i}_w"] = P.Leaf((k, k, in_ch, out_ch), (None, None, None, "mlp"),
+                                    fan_in=k * k * in_ch)
+        spec[f"conv{i}_b"] = P.Leaf((out_ch,), ("mlp",), init="zeros")
+        size = (size - k) // s + 1
+        in_ch = out_ch
+    flat = size * size * in_ch
+    spec["fc_w"] = P.Leaf((flat, cfg.hidden), (None, "mlp"), fan_in=flat)
+    spec["fc_b"] = P.Leaf((cfg.hidden,), ("mlp",), init="zeros")
+    spec["out_w"] = P.Leaf((cfg.hidden, n_actions), ("mlp", None), fan_in=cfg.hidden)
+    spec["out_b"] = P.Leaf((n_actions,), (None,), init="zeros")
+    return spec
+
+
+def q_init(cfg: NatureCNNConfig, n_actions: int, key: jax.Array):
+    return P.init_tree(q_param_spec(cfg, n_actions), key)
+
+
+def q_forward(params, frames: jax.Array, cfg: NatureCNNConfig) -> jax.Array:
+    """frames: (B, H, W, C) uint8 -> Q-values (B, n_actions) float32."""
+    x = frames.astype(jnp.float32) / 255.0
+    for i, (_, k, s) in enumerate(cfg.convs):
+        x = jax.lax.conv_general_dilated(
+            x, params[f"conv{i}_w"], window_strides=(s, s), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + params[f"conv{i}_b"])
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc_w"] + params["fc_b"])
+    return x @ params["out_w"] + params["out_b"]

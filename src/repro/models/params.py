@@ -1,0 +1,116 @@
+"""Parameter-spec infrastructure: a single source of truth per model.
+
+A model declares its parameters as a nested dict of :class:`Leaf`
+(shape + logical axes + initializer). From that one spec we derive:
+
+* ``init_tree``      — materialized parameters (used by smoke tests / training)
+* ``abstract_tree``  — ShapeDtypeStructs (used by the dry-run; no allocation)
+* ``partition_tree`` — jax.sharding.PartitionSpec per leaf, via logical-axis
+                       rules (used for in_shardings in pjit)
+
+Logical axis names used across the framework:
+  embed, vocab, heads, kv_heads, head_dim, mlp, experts, expert_mlp,
+  layers (the superblock scan dim), ssm_inner, ssm_heads, state, conv,
+  pos, cross_mem
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Leaf:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"       # normal | zeros | ones | embed | scaled
+    dtype: Any = jnp.float32
+    fan_in: Optional[int] = None  # overrides scale for "normal"/"scaled"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaves(spec: Tree, prefix=()) -> list:
+    out = []
+    if isinstance(spec, Leaf):
+        out.append((prefix, spec))
+    elif isinstance(spec, dict):
+        for k in sorted(spec):
+            out.extend(_leaves(spec[k], prefix + (k,)))
+    else:
+        raise TypeError(f"bad spec node at {prefix}: {type(spec)}")
+    return out
+
+
+def _build(spec: Tree, fn: Callable[[Tuple[str, ...], Leaf], Any], prefix=()) -> Tree:
+    if isinstance(spec, Leaf):
+        return fn(prefix, spec)
+    return {k: _build(v, fn, prefix + (k,)) for k, v in spec.items()}
+
+
+def _init_leaf(key: jax.Array, leaf: Leaf) -> jax.Array:
+    if leaf.init == "zeros":
+        return jnp.zeros(leaf.shape, leaf.dtype)
+    if leaf.init == "ones":
+        return jnp.ones(leaf.shape, leaf.dtype)
+    # fan-in scaled normal; embeddings scale 1.0
+    if leaf.init == "embed":
+        scale = 0.02
+    else:
+        fan_in = leaf.fan_in
+        if fan_in is None:
+            # contract over all but the last axis by convention
+            fan_in = int(np.prod(leaf.shape[:-1])) if len(leaf.shape) > 1 else leaf.shape[0]
+            # stacked layer dim doesn't contribute to fan-in
+            if leaf.axes and leaf.axes[0] == "layers" and len(leaf.shape) > 2:
+                fan_in = int(np.prod(leaf.shape[1:-1]))
+        scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (scale * jax.random.normal(key, leaf.shape, jnp.float32)).astype(leaf.dtype)
+
+
+def init_tree(spec: Tree, key: jax.Array) -> Tree:
+    leaves = _leaves(spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    keymap = {path: keys[i] for i, (path, _) in enumerate(leaves)}
+    return _build(spec, lambda path, leaf: _init_leaf(keymap[path], leaf))
+
+
+def abstract_tree(spec: Tree) -> Tree:
+    return _build(spec, lambda _, leaf: jax.ShapeDtypeStruct(leaf.shape, leaf.dtype))
+
+
+def partition_tree(spec: Tree, rules: Dict[str, Optional[str]]) -> Tree:
+    """Map each leaf's logical axes through ``rules`` to a PartitionSpec.
+
+    A logical axis absent from ``rules`` is replicated. A rule may only be
+    applied if the dimension is divisible by the mesh-axis size product —
+    the caller bakes divisibility into ``rules`` (see sharding/rules.py).
+    """
+    def to_spec(_, leaf: Leaf) -> P:
+        return P(*[rules.get(ax) if ax is not None else None for ax in leaf.axes])
+    return _build(spec, to_spec)
+
+
+def stacked(spec: Tree, n: int) -> Tree:
+    """Add a leading 'layers' scan dimension of size n to every leaf."""
+    def add(_, leaf: Leaf) -> Leaf:
+        return Leaf((n,) + leaf.shape, ("layers",) + leaf.axes,
+                    init=leaf.init, dtype=leaf.dtype, fan_in=leaf.fan_in)
+    return _build(spec, add)
+
+
+def param_count(spec: Tree) -> int:
+    return sum(int(np.prod(leaf.shape)) for _, leaf in _leaves(spec))
+
+
+def tree_bytes(tree: Tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(tree))

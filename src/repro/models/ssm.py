@@ -1,0 +1,174 @@
+"""Mamba2 block (state-space duality / SSD), pure JAX.
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk quadratic
+attention-like compute + an inter-chunk sequential state pass, executed as
+``lax.scan`` over chunks (the state recurrence is inherently sequential;
+scanning also bounds the (L, L) decay-matrix working set to one chunk).
+Decode is the O(1) recurrent update. The Pallas kernel in
+``kernels/ssm_scan.py`` implements the same chunk body with VMEM tiling.
+
+Recurrence (per head h, channels P, state N):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t ⊗ x_t
+    y_t = C_t · h_t + D * x_t
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import ExecConfig, rms_norm
+from repro.models import params as P
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.head_dim, s.state_dim
+
+
+def mamba2_param_spec(cfg: ModelConfig) -> Dict[str, P.Leaf]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, Pd, N = ssm_dims(cfg)
+    conv_ch = d_inner + 2 * N
+    return {
+        "in_proj": P.Leaf((d, 2 * d_inner + 2 * N + H), ("embed", "ssm_inner"), fan_in=d),
+        "conv_w": P.Leaf((s.conv_width, conv_ch), ("conv", "ssm_conv")),
+        "conv_b": P.Leaf((conv_ch,), ("ssm_conv",), init="zeros"),
+        "A_log": P.Leaf((H,), ("ssm_heads",), init="zeros"),
+        "dt_bias": P.Leaf((H,), ("ssm_heads",), init="zeros"),
+        "D": P.Leaf((H,), ("ssm_heads",), init="ones"),
+        "norm": P.Leaf((d_inner,), ("ssm_inner",), init="ones"),
+        "out_proj": P.Leaf((d_inner, d), ("ssm_inner", "embed"), fan_in=d_inner),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _split_in_proj(cfg: ModelConfig, proj: jax.Array):
+    d_inner, H, Pd, N = ssm_dims(cfg)
+    z, xin, Bm, Cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1)
+    return z, xin, Bm, Cm, dt
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
+    """x: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) negative;
+    Bm, Cm: (B,S,N). Returns y: (B,S,H,P), final state (B,H,P,N)."""
+    Bb, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+    a = (dt * A.astype(dt.dtype)).astype(jnp.float32)           # (B,S,H) log-decay
+    xc = x.reshape(Bb, nc, L, H, Pd).transpose(1, 0, 2, 3, 4)
+    ac = a.reshape(Bb, nc, L, H).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(Bb, nc, L, H).transpose(1, 0, 2, 3)
+    Bc = Bm.reshape(Bb, nc, L, N).transpose(1, 0, 2, 3)
+    Cc = Cm.reshape(Bb, nc, L, N).transpose(1, 0, 2, 3)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, Pd, N), jnp.float32)
+
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    tri = (jj <= ii)[None, :, :, None]                           # (1,L,L,1)
+
+    def body(h, xs):
+        xk, ak, dk, Bk, Ck = xs                                  # per-chunk slices
+        cum = jnp.cumsum(ak, axis=1)                              # (B,L,H) inclusive
+        # intra-chunk: W[i,j] = (C_i·B_j) exp(cum_i - cum_j) dt_j, j<=i
+        D = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])      # (B,L,L,H)
+        D = jnp.where(tri, D, 0.0)
+        G = jnp.einsum("bin,bjn->bij", Ck.astype(jnp.float32), Bk.astype(jnp.float32))
+        Wm = G[..., None] * D * dk[:, None, :, :].astype(jnp.float32)
+        y = jnp.einsum("bijh,bjhp->bihp", Wm, xk.astype(jnp.float32))
+        # cross-chunk: y_i += exp(cum_i) * C_i · h_prev
+        ycross = jnp.einsum("bin,bhpn->bihp", Ck.astype(jnp.float32), h)
+        y = y + ycross * jnp.exp(cum)[..., None]
+        # state update
+        total = cum[:, -1]                                        # (B,H)
+        sdec = jnp.exp(total[:, None, :] - cum) * dk.astype(jnp.float32)  # (B,L,H)
+        h_in = jnp.einsum("bjh,bjn,bjhp->bhpn", sdec, Bk.astype(jnp.float32),
+                          xk.astype(jnp.float32))
+        h = h * jnp.exp(total)[:, :, None, None] + h_in
+        return h, y.astype(x.dtype)
+
+    h_final, yc = jax.lax.scan(body, h0, (xc, ac, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bb, S, H, Pd)
+    return y, h_final
+
+
+def mamba2_forward(p, x: jax.Array, cfg: ModelConfig, ec: ExecConfig,
+                   state=None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence Mamba2 block. x: (B, S, d) -> (y, final_state)."""
+    d_inner, H, Pd, N = ssm_dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xin, Bm, Cm, dt = _split_in_proj(cfg, proj)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xin, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(*xin.shape[:2], H, Pd)
+    if ec.use_pallas:
+        from repro.kernels import ops
+        y, h_final = ops.ssm_scan(xh, dt, A, Bm, Cm, chunk=cfg.ssm.chunk,
+                                  interpret=ec.interpret)
+    else:
+        y, h_final = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm.chunk)
+    y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(*y.shape[:2], d_inner)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(y.dtype)), h_final
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    d_inner, H, Pd, N = ssm_dims(cfg)
+    conv_ch = d_inner + 2 * N
+    return {
+        "state": jnp.zeros((batch, H, Pd, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def mamba2_decode_step(p, x: jax.Array, cache: Dict[str, jax.Array],
+                       cfg: ModelConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token recurrent update. x: (B, 1, d)."""
+    d_inner, H, Pd, N = ssm_dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xin, Bm, Cm, dt = _split_in_proj(cfg, proj)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)          # (B,1,C)
+    window = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,W,C)
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w) + p["conv_b"].astype(x.dtype))
+    new_conv = window[:, 1:]
+    xin, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(-1, H, Pd).astype(jnp.float32)             # (B,H,P)
+    dth = dt[..., 0] if dt.ndim == 3 else dt                    # (B,H)
+    decay = jnp.exp(dth * A[None, :])                           # (B,H)
+    h = cache["state"] * decay[:, :, None, None]
+    h = h + jnp.einsum("bh,bn,bhp->bhpn", dth, Bm.astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(-1, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(y.dtype))
+    return out, {"state": h, "conv": new_conv}

@@ -1,0 +1,484 @@
+"""The composed model: any assigned architecture, one code path.
+
+A model is a stack of *superblocks* (cfg.superblock repeated
+cfg.n_superblocks times) executed with ``lax.scan`` over stacked
+parameters, so lowered-HLO size is depth-independent. Block kinds:
+ATTN (GQA self-attn + MLP), CROSS_ATTN (self + cross + MLP),
+MAMBA2, MLSTM, SLSTM.
+
+Public API:
+  model_param_spec(cfg)                 -> param spec tree (source of truth)
+  init_params(cfg, key) / abstract_params(cfg)
+  forward(cfg, ec, params, tokens, memory=None)    -> logits, aux  (train/prefill)
+  init_cache(cfg, ec, batch, cache_len, ring)      -> decode cache
+  decode_step(cfg, ec, params, cache, tokens, memory=None) -> logits, cache
+  encode(cfg, ec, params, frames)                  -> memory (whisper encoder)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (ATTN, CROSS_ATTN, MAMBA2, MLSTM, SLSTM, ModelConfig)
+from repro.models import params as P
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+from repro.models.layers import (DEFAULT_EXEC, ExecConfig, apply_rope, gelu_mlp,
+                                 rms_norm, round_up, swiglu)
+
+Tree = Any
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _mlp_spec(cfg: ModelConfig) -> Dict[str, P.Leaf]:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.moe is not None:
+        return M.moe_param_spec(cfg)
+    if cfg.mlp_kind == "gelu":
+        return {
+            "w_up": P.Leaf((d, f), ("embed", "mlp"), fan_in=d),
+            "b_up": P.Leaf((f,), ("mlp",), init="zeros"),
+            "w_down": P.Leaf((f, d), ("mlp", "embed"), fan_in=f),
+            "b_down": P.Leaf((d,), ("embed",), init="zeros"),
+        }
+    return {
+        "w_gate": P.Leaf((d, f), ("embed", "mlp"), fan_in=d),
+        "w_up": P.Leaf((d, f), ("embed", "mlp"), fan_in=d),
+        "w_down": P.Leaf((f, d), ("mlp", "embed"), fan_in=f),
+    }
+
+
+def _attn_spec(cfg: ModelConfig, cross: bool = False) -> Dict[str, P.Leaf]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    spec = {
+        "norm1": P.Leaf((d,), ("embed",), init="ones"),
+        "wq": P.Leaf((d, H * hd), ("embed", "heads_flat"), fan_in=d),
+        "wk": P.Leaf((d, Hkv * hd), ("embed", "kv_flat"), fan_in=d),
+        "wv": P.Leaf((d, Hkv * hd), ("embed", "kv_flat"), fan_in=d),
+        "wo": P.Leaf((H * hd, d), ("heads_flat", "embed"), fan_in=H * hd),
+        "norm2": P.Leaf((d,), ("embed",), init="ones"),
+        "mlp": _mlp_spec(cfg),
+    }
+    if cross:
+        spec.update({
+            "norm_x": P.Leaf((d,), ("embed",), init="ones"),
+            "wq_x": P.Leaf((d, H * hd), ("embed", "heads_flat"), fan_in=d),
+            "wk_x": P.Leaf((d, Hkv * hd), ("embed", "kv_flat"), fan_in=d),
+            "wv_x": P.Leaf((d, Hkv * hd), ("embed", "kv_flat"), fan_in=d),
+            "wo_x": P.Leaf((H * hd, d), ("heads_flat", "embed"), fan_in=H * hd),
+        })
+        if cfg.family == "vlm":
+            # llama-3.2-vision tanh-gated cross-attention
+            spec["gate_x"] = P.Leaf((1,), (None,), init="zeros")
+    return spec
+
+
+def _block_spec(cfg: ModelConfig, kind: str) -> Dict[str, P.Leaf]:
+    if kind == ATTN:
+        return _attn_spec(cfg, cross=False)
+    if kind == CROSS_ATTN:
+        return _attn_spec(cfg, cross=True)
+    if kind == MAMBA2:
+        return SSM.mamba2_param_spec(cfg)
+    if kind == MLSTM:
+        return XL.mlstm_param_spec(cfg)
+    if kind == SLSTM:
+        return XL.slstm_param_spec(cfg)
+    raise ValueError(kind)
+
+
+def _scanned_superblock_spec(cfg: ModelConfig) -> Dict[str, Tree]:
+    """Per-superblock spec, excluding shared blocks."""
+    spec = {}
+    for i, kind in enumerate(cfg.superblock):
+        if kind == ATTN and cfg.shared_attention:
+            continue
+        spec[f"b{i}_{kind}"] = _block_spec(cfg, kind)
+    return spec
+
+
+def padded_vocab(cfg: ModelConfig, ec: ExecConfig) -> int:
+    return round_up(cfg.vocab, ec.vocab_pad)
+
+
+def model_param_spec(cfg: ModelConfig, ec: ExecConfig = DEFAULT_EXEC) -> Tree:
+    d = cfg.d_model
+    vpad = padded_vocab(cfg, ec)
+    spec: Dict[str, Tree] = {
+        "embed": P.Leaf((vpad, d), ("vocab", "embed"), init="embed"),
+        "final_norm": P.Leaf((d,), ("embed",), init="ones"),
+        "layers": P.stacked(_scanned_superblock_spec(cfg), cfg.n_superblocks),
+    }
+    if not cfg.tie_embeddings:
+        spec["unembed"] = P.Leaf((d, vpad), ("embed", "vocab"), fan_in=d)
+    if cfg.shared_attention:
+        spec["shared_attn"] = _attn_spec(cfg, cross=False)
+    if cfg.pos_kind == "learned":
+        spec["pos_embed"] = P.Leaf((cfg.learned_pos_len, d), ("pos", "embed"), init="embed")
+    if cfg.is_encoder_decoder:
+        enc_layer = {
+            "norm1": P.Leaf((d,), ("embed",), init="ones"),
+            "wq": P.Leaf((d, cfg.n_heads * cfg.resolved_head_dim), ("embed", "heads_flat"), fan_in=d),
+            "wk": P.Leaf((d, cfg.n_kv_heads * cfg.resolved_head_dim), ("embed", "kv_flat"), fan_in=d),
+            "wv": P.Leaf((d, cfg.n_kv_heads * cfg.resolved_head_dim), ("embed", "kv_flat"), fan_in=d),
+            "wo": P.Leaf((cfg.n_heads * cfg.resolved_head_dim, d), ("heads_flat", "embed"), fan_in=d),
+            "norm2": P.Leaf((d,), ("embed",), init="ones"),
+            "mlp": _mlp_spec(cfg),
+        }
+        spec["encoder"] = {
+            "layers": P.stacked(enc_layer, cfg.n_encoder_layers),
+            "pos": P.Leaf((cfg.cross_memory_len, d), ("pos", "embed"), init="embed"),
+            "final_norm": P.Leaf((d,), ("embed",), init="ones"),
+        }
+    return spec
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, ec: ExecConfig = DEFAULT_EXEC) -> Tree:
+    return P.init_tree(model_param_spec(cfg, ec), key)
+
+
+def abstract_params(cfg: ModelConfig, ec: ExecConfig = DEFAULT_EXEC) -> Tree:
+    return P.abstract_tree(model_param_spec(cfg, ec))
+
+
+# ---------------------------------------------------------------------------
+# Blocks (full-sequence path)
+# ---------------------------------------------------------------------------
+
+def _heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _mlp(bp, x, cfg: ModelConfig, ec: ExecConfig):
+    if cfg.moe is not None:
+        return M.moe_ffn(bp, x, cfg, ec)
+    if cfg.mlp_kind == "gelu":
+        return gelu_mlp(x, bp["w_up"], bp["b_up"], bp["w_down"], bp["b_down"]), 0.0
+    return swiglu(x, bp["w_gate"], bp["w_up"], bp["w_down"]), 0.0
+
+
+def _self_attention(bp, x, positions, cfg: ModelConfig, ec: ExecConfig,
+                    causal: bool = True, window: Optional[int] = None,
+                    return_kv: bool = False):
+    hd = cfg.resolved_head_dim
+    h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+    q = _heads(jnp.einsum("bsd,de->bse", h, bp["wq"].astype(h.dtype)), cfg.n_heads, hd)
+    k = _heads(jnp.einsum("bsd,de->bse", h, bp["wk"].astype(h.dtype)), cfg.n_kv_heads, hd)
+    v = _heads(jnp.einsum("bsd,de->bse", h, bp["wv"].astype(h.dtype)), cfg.n_kv_heads, hd)
+    if cfg.pos_kind == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if causal:
+        o = A.causal_attention(q, k, v, ec, window=window)
+    else:
+        o = A.bidirectional_attention(q, k, v, ec)
+    o = o.reshape(*o.shape[:2], cfg.n_heads * hd)
+    out = jnp.einsum("bse,ed->bsd", o, bp["wo"].astype(o.dtype))
+    if return_kv:
+        return out, k, v
+    return out
+
+
+def _cross_attention(bp, x, memory, cfg: ModelConfig, ec: ExecConfig):
+    hd = cfg.resolved_head_dim
+    h = rms_norm(x, bp["norm_x"], cfg.norm_eps)
+    q = _heads(jnp.einsum("bsd,de->bse", h, bp["wq_x"].astype(h.dtype)), cfg.n_heads, hd)
+    k = _heads(jnp.einsum("bmd,de->bme", memory, bp["wk_x"].astype(h.dtype)), cfg.n_kv_heads, hd)
+    v = _heads(jnp.einsum("bmd,de->bme", memory, bp["wv_x"].astype(h.dtype)), cfg.n_kv_heads, hd)
+    o = A.bidirectional_attention(q, k, v, ec)
+    o = o.reshape(*o.shape[:2], cfg.n_heads * hd)
+    o = jnp.einsum("bse,ed->bsd", o, bp["wo_x"].astype(o.dtype))
+    if "gate_x" in bp:
+        o = o * jnp.tanh(bp["gate_x"].astype(o.dtype))
+    return o
+
+
+def _apply_block(kind: str, bp, x, positions, memory, cfg: ModelConfig,
+                 ec: ExecConfig, collect: Optional[int] = None):
+    """Full-sequence block application. Returns (x, aux_loss, cache_entry).
+    ``collect``: if set, also build this block's decode-cache entry for a
+    cache of length ``collect`` (the fused-prefill path)."""
+    aux = 0.0
+    entry = None
+    hd = cfg.resolved_head_dim
+    dt = ec.cdtype
+    if kind in (ATTN, CROSS_ATTN):
+        if collect is not None:
+            h, k, v = _self_attention(bp, x, positions, cfg, ec,
+                                      return_kv=True)
+            S = x.shape[1]
+            pad = [(0, 0), (0, 0), (0, collect - S), (0, 0)]
+            entry = {
+                "k": jnp.pad(k.transpose(0, 2, 1, 3).astype(dt), pad),
+                "v": jnp.pad(v.transpose(0, 2, 1, 3).astype(dt), pad),
+            }
+            x = x + h
+        else:
+            x = x + _self_attention(bp, x, positions, cfg, ec)
+        if kind == CROSS_ATTN:
+            x = x + _cross_attention(bp, x, memory, cfg, ec)
+            if collect is not None:
+                mk = _heads(jnp.einsum("bmd,de->bme", memory,
+                                       bp["wk_x"].astype(memory.dtype)),
+                            cfg.n_kv_heads, hd)
+                mv = _heads(jnp.einsum("bmd,de->bme", memory,
+                                       bp["wv_x"].astype(memory.dtype)),
+                            cfg.n_kv_heads, hd)
+                entry["ck"] = mk.transpose(0, 2, 1, 3).astype(dt)
+                entry["cv"] = mv.transpose(0, 2, 1, 3).astype(dt)
+        h, aux = _mlp(bp["mlp"], rms_norm(x, bp["norm2"], cfg.norm_eps), cfg, ec)
+        x = x + h
+    elif kind == MAMBA2:
+        h, state = SSM.mamba2_forward(bp, x, cfg, ec)
+        if collect is not None:
+            w = cfg.ssm.conv_width
+            d_inner, _, _, N = SSM.ssm_dims(cfg)
+            proj = jnp.einsum("bsd,de->bse", x, bp["in_proj"].astype(x.dtype))
+            _, xin, Bm, Cm, _ = SSM._split_in_proj(cfg, proj)
+            conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+            entry = {"state": state,
+                     "conv": conv_in[:, -(w - 1):].astype(dt)}
+        x = x + h
+    elif kind == MLSTM:
+        h, state = XL.mlstm_forward(bp, x, cfg, ec)
+        if collect is not None:
+            up = jnp.einsum("bsd,de->bse", x, bp["up_proj"].astype(x.dtype))
+            xm, _ = jnp.split(up, 2, axis=-1)
+            w = cfg.xlstm.conv_width
+            entry = {"state": state, "conv": xm[:, -(w - 1):].astype(dt)}
+        x = x + h
+    elif kind == SLSTM:
+        h, state = XL.slstm_forward(bp, x, cfg, ec)
+        if collect is not None:
+            entry = {"state": state}
+        x = x + h
+    else:
+        raise ValueError(kind)
+    return x, aux, entry
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder / full-sequence forward
+# ---------------------------------------------------------------------------
+
+def encode(cfg: ModelConfig, ec: ExecConfig, params: Tree, frames: jax.Array) -> jax.Array:
+    """frames: (B, cross_memory_len, d) post-conv-stub embeddings."""
+    enc = params["encoder"]
+    x = frames.astype(ec.cdtype) + enc["pos"].astype(ec.cdtype)[None]
+
+    def body(x, lp):
+        h = _self_attention(lp, x, None, cfg, ec, causal=False)
+        x = x + h
+        h, _ = _mlp(lp["mlp"], rms_norm(x, lp["norm2"], cfg.norm_eps), cfg, ec)
+        return x + h, None
+
+    x, _ = jax.lax.scan(body, x, enc["layers"])
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def _unembed(cfg, ec, params, x):
+    vpad = padded_vocab(cfg, ec)
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    return jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+
+
+def forward(cfg: ModelConfig, ec: ExecConfig, params: Tree, tokens: jax.Array,
+            memory: Optional[jax.Array] = None,
+            collect_cache_len: Optional[int] = None):
+    """Training / prefill forward. tokens: (B, S) int32.
+
+    memory: (B, M, d) cross-attention memory — patch embeddings for VLM,
+    encoder frames for whisper (pre-encoder; encoded here).
+    Returns (logits (B, S, vpad), aux_loss scalar); with
+    ``collect_cache_len`` set, also returns a ready decode cache of that
+    length (the fused-prefill path — one forward builds the KV/state
+    caches instead of S decode steps)."""
+    B, S = tokens.shape
+    x = params["embed"].astype(ec.cdtype)[tokens]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    if cfg.pos_kind == "learned":
+        x = x + params["pos_embed"].astype(ec.cdtype)[positions % cfg.learned_pos_len][None]
+    if cfg.is_encoder_decoder:
+        assert memory is not None, "whisper needs frame embeddings"
+        memory = encode(cfg, ec, params, memory)
+    if memory is not None:
+        memory = memory.astype(ec.cdtype)
+
+    shared = params.get("shared_attn")
+
+    def body(carry, lp):
+        x, aux = carry
+        entries = {}
+        for i, kind in enumerate(cfg.superblock):
+            if kind == ATTN and cfg.shared_attention:
+                bp = shared
+            else:
+                bp = lp[f"b{i}_{kind}"]
+            x, a, e = _apply_block(kind, bp, x, positions, memory, cfg, ec,
+                                   collect=collect_cache_len)
+            aux = aux + a
+            entries[f"b{i}_{kind}"] = e
+        return (x, aux), (entries if collect_cache_len else None)
+
+    if ec.remat and not collect_cache_len:
+        body = jax.checkpoint(body)
+    (x, aux), entries = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                     params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(cfg, ec, params, x)
+    aux = aux / max(cfg.n_layers, 1)
+    if collect_cache_len:
+        cache = {"layers": entries, "pos": jnp.int32(S),
+                 "ring": jnp.asarray(False)}
+        return logits, aux, cache
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode path (serve_step)
+# ---------------------------------------------------------------------------
+
+def _block_cache_spec(cfg: ModelConfig, ec: ExecConfig, kind: str, batch: int,
+                      cache_len: int) -> Tree:
+    hd = cfg.resolved_head_dim
+    dt = ec.cdtype
+    if kind in (ATTN, CROSS_ATTN):
+        c = {
+            "k": jnp.zeros((batch, cfg.n_kv_heads, cache_len, hd), dt),
+            "v": jnp.zeros((batch, cfg.n_kv_heads, cache_len, hd), dt),
+        }
+        if kind == CROSS_ATTN:
+            m = cfg.cross_memory_len
+            c["ck"] = jnp.zeros((batch, cfg.n_kv_heads, m, hd), dt)
+            c["cv"] = jnp.zeros((batch, cfg.n_kv_heads, m, hd), dt)
+        return c
+    if kind == MAMBA2:
+        return SSM.mamba2_init_cache(cfg, batch, dt)
+    if kind == MLSTM:
+        return XL.mlstm_init_cache(cfg, batch, dt)
+    if kind == SLSTM:
+        return {"state": XL.slstm_init_state(cfg, batch)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, ec: ExecConfig, batch: int, cache_len: int,
+               ring: bool = False) -> Tree:
+    """Decode cache pytree. ``cache_len`` is the KV length (the window for
+    ring caches). ``cache["pos"]`` counts tokens already consumed."""
+    per_sb = {}
+    for i, kind in enumerate(cfg.superblock):
+        one = _block_cache_spec(cfg, ec, kind, batch, cache_len)
+        per_sb[f"b{i}_{kind}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_superblocks,) + a.shape), one)
+    return {"layers": per_sb, "pos": jnp.zeros((), jnp.int32),
+            "ring": jnp.asarray(ring)}
+
+
+def _decode_block(kind: str, bp, cache_slice, x, pos, ring: bool,
+                  cfg: ModelConfig, ec: ExecConfig):
+    """One-token block application against one superblock's cache slice."""
+    hd = cfg.resolved_head_dim
+    new_cache = cache_slice
+    if kind in (ATTN, CROSS_ATTN):
+        h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+        q = _heads(jnp.einsum("bsd,de->bse", h, bp["wq"].astype(h.dtype)), cfg.n_heads, hd)
+        k = _heads(jnp.einsum("bsd,de->bse", h, bp["wk"].astype(h.dtype)), cfg.n_kv_heads, hd)
+        v = _heads(jnp.einsum("bsd,de->bse", h, bp["wv"].astype(h.dtype)), cfg.n_kv_heads, hd)
+        if cfg.pos_kind == "rope":
+            pvec = pos[None, None] if pos.ndim == 0 else pos
+            q = apply_rope(q, jnp.broadcast_to(pvec, (x.shape[0], 1)), cfg.rope_theta)
+            k = apply_rope(k, jnp.broadcast_to(pvec, (x.shape[0], 1)), cfg.rope_theta)
+        kc, vc = A.cache_update(cache_slice["k"], cache_slice["v"], k, v, pos, ring)
+        o = A.decode_attention(q, kc, vc, pos + 1, ec, ring=ring)
+        o = o.reshape(*o.shape[:2], cfg.n_heads * hd)
+        x = x + jnp.einsum("bse,ed->bsd", o, bp["wo"].astype(o.dtype))
+        new_cache = dict(cache_slice, k=kc, v=vc)
+        if kind == CROSS_ATTN:
+            hq = rms_norm(x, bp["norm_x"], cfg.norm_eps)
+            qx = _heads(jnp.einsum("bsd,de->bse", hq, bp["wq_x"].astype(hq.dtype)), cfg.n_heads, hd)
+            ox = A.decode_attention(qx, cache_slice["ck"], cache_slice["cv"],
+                                    jnp.int32(cfg.cross_memory_len), ec)
+            ox = ox.reshape(*ox.shape[:2], cfg.n_heads * hd)
+            ox = jnp.einsum("bse,ed->bsd", ox, bp["wo_x"].astype(ox.dtype))
+            if "gate_x" in bp:
+                ox = ox * jnp.tanh(bp["gate_x"].astype(ox.dtype))
+            x = x + ox
+        h, _ = _mlp(bp["mlp"], rms_norm(x, bp["norm2"], cfg.norm_eps), cfg, ec)
+        x = x + h
+    elif kind == MAMBA2:
+        h, new_cache = SSM.mamba2_decode_step(bp, x, cache_slice, cfg)
+        x = x + h
+    elif kind == MLSTM:
+        h, new_cache = XL.mlstm_decode_step(bp, x, cache_slice, cfg)
+        x = x + h
+    elif kind == SLSTM:
+        h, st = XL.slstm_decode_step(bp, x, cache_slice["state"], cfg)
+        x = x + h
+        new_cache = {"state": st}
+    else:
+        raise ValueError(kind)
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, ec: ExecConfig, params: Tree, cache: Tree,
+                tokens: jax.Array, ring: bool = False) -> Tuple[jax.Array, Tree]:
+    """One decode step. tokens: (B, 1) int32. Cross-attention K/V must have
+    been written into the cache at prefill time (see prefill_cross_cache).
+    Returns (logits (B, 1, vpad), new cache)."""
+    pos = cache["pos"]
+    x = params["embed"].astype(ec.cdtype)[tokens]
+    if cfg.pos_kind == "learned":
+        x = x + params["pos_embed"].astype(ec.cdtype)[pos % cfg.learned_pos_len][None, None]
+    shared = params.get("shared_attn")
+
+    def body(x, xs):
+        lp, cs = xs
+        new_cs = {}
+        for i, kind in enumerate(cfg.superblock):
+            name = f"b{i}_{kind}"
+            bp = shared if (kind == ATTN and cfg.shared_attention) else lp.get(name)
+            x, new_cs[name] = _decode_block(kind, bp, cs[name], x, pos, ring, cfg, ec)
+        return x, new_cs
+
+    x, new_layer_cache = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(cfg, ec, params, x)
+    return logits, {"layers": new_layer_cache, "pos": pos + 1, "ring": cache["ring"]}
+
+
+def prefill_cross_cache(cfg: ModelConfig, ec: ExecConfig, params: Tree,
+                        cache: Tree, memory: jax.Array) -> Tree:
+    """Compute cross-attention K/V from memory and write them into every
+    CROSS_ATTN slot of the cache (the decode-time constant part)."""
+    if cfg.is_encoder_decoder:
+        memory = encode(cfg, ec, params, memory)
+    memory = memory.astype(ec.cdtype)
+    hd = cfg.resolved_head_dim
+    layers = dict(cache["layers"])
+    for i, kind in enumerate(cfg.superblock):
+        if kind != CROSS_ATTN:
+            continue
+        name = f"b{i}_{kind}"
+        lp = params["layers"][name]
+
+        def kv_one(wk, wv):
+            k = _heads(jnp.einsum("bmd,sde->sbme", memory, wk.astype(memory.dtype)),
+                       cfg.n_kv_heads, hd)
+            v = _heads(jnp.einsum("bmd,sde->sbme", memory, wv.astype(memory.dtype)),
+                       cfg.n_kv_heads, hd)
+            return k.transpose(0, 1, 3, 2, 4), v.transpose(0, 1, 3, 2, 4)
+
+        ck, cv = kv_one(lp["wk_x"], lp["wv_x"])        # (n_sb, B, Hkv, M, hd)
+        layers[name] = dict(layers[name], ck=ck, cv=cv)
+    return dict(cache, layers=layers)

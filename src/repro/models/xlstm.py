@@ -1,0 +1,310 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM
+(scalar memory with recurrent block-diagonal connections), pure JAX.
+
+Both are implemented in their exact stabilized recurrent form via
+``lax.scan`` over time (the sLSTM recurrence is inherently sequential —
+h_{t-1} feeds the gates; the mLSTM could be chunked like SSD, which is
+noted as an optimization in EXPERIMENTS.md §Perf). Decode is the same
+single-step update, making these architectures O(1)-state for the
+long_500k decode shape.
+
+mLSTM stabilized recurrence (per head, head dim P):
+    m_t = max(f̃_t + m_{t-1}, ĩ_t)
+    i'  = exp(ĩ_t - m_t);  f' = exp(f̃_t + m_{t-1} - m_t)
+    C_t = f' C_{t-1} + i' (k_t ⊗ v_t);   n_t = f' n_{t-1} + i' k_t
+    h_t = (C_t^T q_t) / max(|n_t · q_t|, 1)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import ExecConfig, rms_norm
+from repro.models import params as P
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.xlstm.expand * cfg.d_model
+    H = cfg.n_heads
+    return d_inner, H, d_inner // H
+
+
+def mlstm_param_spec(cfg: ModelConfig) -> Dict[str, P.Leaf]:
+    d = cfg.d_model
+    d_inner, H, Pd = mlstm_dims(cfg)
+    w = cfg.xlstm.conv_width
+    return {
+        "up_proj": P.Leaf((d, 2 * d_inner), ("embed", "ssm_inner"), fan_in=d),
+        "conv_w": P.Leaf((w, d_inner), ("conv", "ssm_inner")),
+        "conv_b": P.Leaf((d_inner,), ("ssm_inner",), init="zeros"),
+        # square projections: shard the output dim only (Megatron column
+        # style) — a dim can appear once per PartitionSpec
+        "w_q": P.Leaf((d_inner, d_inner), ("ssm_inner_in", "ssm_inner"), fan_in=d_inner),
+        "w_k": P.Leaf((d_inner, d_inner), ("ssm_inner_in", "ssm_inner"), fan_in=d_inner),
+        "w_v": P.Leaf((d_inner, d_inner), ("ssm_inner_in", "ssm_inner"), fan_in=d_inner),
+        "w_gates": P.Leaf((d_inner, 2 * H), ("ssm_inner", None), fan_in=d_inner),
+        "b_gates": P.Leaf((2 * H,), (None,), init="zeros"),
+        "norm": P.Leaf((d_inner,), ("ssm_inner",), init="ones"),
+        "down_proj": P.Leaf((d_inner, d), ("ssm_inner", "embed"), fan_in=d_inner),
+    }
+
+
+def _mlstm_qkv_gates(p, x, cfg):
+    """Shared pre-recurrence compute. x: (B, S, d)."""
+    from repro.models.ssm import _causal_conv
+    d_inner, H, Pd = mlstm_dims(cfg)
+    up = jnp.einsum("bsd,de->bse", x, p["up_proj"].astype(x.dtype))
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xm, p["conv_w"], p["conv_b"]))
+    q = jnp.einsum("bse,ef->bsf", xc, p["w_q"].astype(x.dtype))
+    k = jnp.einsum("bse,ef->bsf", xc, p["w_k"].astype(x.dtype)) * (Pd ** -0.5)
+    v = jnp.einsum("bse,ef->bsf", xm, p["w_v"].astype(x.dtype))
+    gates = jnp.einsum("bse,eg->bsg", xc, p["w_gates"].astype(x.dtype))
+    gates = gates.astype(jnp.float32) + p["b_gates"].astype(jnp.float32)
+    i_t, f_t = jnp.split(gates, 2, axis=-1)            # (B,S,H) each
+    shp = lambda t: t.reshape(*t.shape[:2], H, Pd)
+    return shp(q), shp(k), shp(v), i_t, f_t, z
+
+
+def _mlstm_step(state, q, k, v, i_t, f_t):
+    """One stabilized step. q/k/v: (B,H,P); i_t/f_t: (B,H)."""
+    C, n, m = state
+    f_log = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(f_log + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_log + m - m_new)
+    kv = jnp.einsum("bhp,bhr->bhpr", k.astype(jnp.float32), v.astype(jnp.float32))
+    C = f_p[..., None, None] * C + i_p[..., None, None] * kv
+    n = f_p[..., None] * n + i_p[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhpr,bhp->bhr", C, q.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, q.astype(jnp.float32))), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_chunked(q, k, v, i_t, f_t, state, chunk: int):
+    """Chunkwise-parallel mLSTM (beyond-paper perf path; see
+    EXPERIMENTS.md §Perf xlstm iteration). Mathematically identical to the
+    step recurrence: the stabilizer recurrence m_t = max(f̃+m, ĩ) unrolls
+    within a chunk to m = cumF + max(m0, cummax(ĩ - cumF)), after which
+    intra-chunk contributions are an (L, L) decay-masked attention and the
+    carried (C, n, m) state is touched once per chunk instead of once per
+    token — an O(chunk) cut in state HBM traffic.
+
+    q/k/v: (B, S, H, P); i_t/f_t: (B, S, H) raw gate pre-activations.
+    """
+    B, S, H, Pd = q.shape
+    L = min(chunk, S)
+    assert S % L == 0
+    nc = S // L
+    f32 = lambda t: t.astype(jnp.float32)
+    part = lambda t: t.reshape(B, nc, L, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+    qc, kc, vc = part(f32(q)), part(f32(k)), part(f32(v))
+    ic, fc = part(f32(i_t)), part(f32(f_t))
+
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    tri = (jj <= ii)[None, :, :, None]                     # (1,L,L,1)
+
+    def body(carry, xs):
+        C, n, m0 = carry                                   # (B,H,P,P),(B,H,P),(B,H)
+        qk_, kk_, vk_, ik_, fk_ = xs                       # (B,L,H,*)
+        f_log = jax.nn.log_sigmoid(fk_)                    # (B,L,H)
+        cumF = jnp.cumsum(f_log, axis=1)
+        a = ik_ - cumF
+        M = jax.lax.cummax(a, axis=1)
+        m = cumF + jnp.maximum(m0[:, None, :], M)          # (B,L,H)
+        # intra-chunk decay-weighted scores
+        D = jnp.exp(cumF[:, :, None, :] - cumF[:, None, :, :]
+                    + ik_[:, None, :, :] - m[:, :, None, :])
+        D = jnp.where(tri, D, 0.0)                         # (B,L_i,L_j,H)
+        G = jnp.einsum("bihp,bjhp->bijh", qk_, kk_)
+        S_ = G * D
+        num = jnp.einsum("bijh,bjhp->bihp", S_, vk_)
+        den = jnp.sum(S_, axis=2)                          # (B,L_i,H)
+        # cross-chunk: carried state, weight exp(cumF_i + m0 - m_i)
+        wc = jnp.exp(cumF + m0[:, None, :] - m)            # (B,L,H)
+        num = num + jnp.einsum("bihp,bhpr->bihr", qk_, C) * wc[..., None]
+        den = den + jnp.einsum("bihp,bhp->bih", qk_, n) * wc
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # state update at chunk end
+        total, m_end = cumF[:, -1], m[:, -1]               # (B,H)
+        w_prev = jnp.exp(total + m0 - m_end)
+        w_in = jnp.exp(total[:, None, :] - cumF + ik_ - m_end[:, None, :])
+        C = C * w_prev[..., None, None] + jnp.einsum(
+            "bjh,bjhp,bjhr->bhpr", w_in, kk_, vk_)
+        n = n * w_prev[..., None] + jnp.einsum("bjh,bjhp->bhp", w_in, kk_)
+        return (C, n, m_end), h
+
+    state, hc = jax.lax.scan(body, state, (qc, kc, vc, ic, fc))
+    h = hc.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Pd)
+    return h, state
+
+
+def mlstm_forward(p, x, cfg: ModelConfig, ec: ExecConfig, state=None,
+                  chunked: bool = True):
+    """x: (B, S, d) -> (y, final_state). Uses the chunkwise-parallel form
+    when the sequence divides the chunk size; the step recurrence remains
+    as the oracle (tests/test_xlstm_chunked.py proves equivalence)."""
+    d_inner, H, Pd = mlstm_dims(cfg)
+    B, S, _ = x.shape
+    q, k, v, i_t, f_t, z = _mlstm_qkv_gates(p, x, cfg)
+    if state is None:
+        state = mlstm_init_state(cfg, B)
+
+    chunk = getattr(cfg.xlstm, "chunk", 64)
+    chunked = chunked and getattr(ec, "mlstm_chunked", True)
+    if chunked and S % min(chunk, S) == 0:
+        hh, state = mlstm_chunked(q, k, v, i_t, f_t, state, chunk)
+        h = hh.reshape(B, S, d_inner).astype(x.dtype)
+    else:
+        sw = lambda t: t.swapaxes(0, 1)                # scan over time
+
+        def body(st, xs):
+            qt, kt, vt, it, ft = xs
+            st, hh = _mlstm_step(st, qt, kt, vt, it, ft)
+            return st, hh
+
+        state, hs = jax.lax.scan(body, state,
+                                 (sw(q), sw(k), sw(v), sw(i_t), sw(f_t)))
+        h = hs.swapaxes(0, 1).reshape(B, S, d_inner).astype(x.dtype)
+    h = rms_norm(h, p["norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", h, p["down_proj"].astype(x.dtype)), state
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    d_inner, H, Pd = mlstm_dims(cfg)
+    return (jnp.zeros((batch, H, Pd, Pd), jnp.float32),
+            jnp.zeros((batch, H, Pd), jnp.float32),
+            jnp.full((batch, H), -1e9, jnp.float32))
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int, dtype):
+    d_inner, H, Pd = mlstm_dims(cfg)
+    return {
+        "state": mlstm_init_state(cfg, batch),
+        "conv": jnp.zeros((batch, cfg.xlstm.conv_width - 1, d_inner), dtype),
+    }
+
+
+def mlstm_decode_step(p, x, cache, cfg: ModelConfig):
+    """x: (B, 1, d)."""
+    d_inner, H, Pd = mlstm_dims(cfg)
+    up = jnp.einsum("bsd,de->bse", x, p["up_proj"].astype(x.dtype))
+    xm, z = jnp.split(up, 2, axis=-1)                  # (B,1,e)
+    window = jnp.concatenate([cache["conv"], xm], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    xc = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w) + p["conv_b"].astype(x.dtype))
+    q = (xc @ p["w_q"].astype(x.dtype)).reshape(-1, H, Pd)
+    k = (xc @ p["w_k"].astype(x.dtype)).reshape(-1, H, Pd) * (Pd ** -0.5)
+    v = (xm[:, 0] @ p["w_v"].astype(x.dtype)).reshape(-1, H, Pd)
+    gates = (xc @ p["w_gates"].astype(x.dtype))
+    gates = gates.astype(jnp.float32) + p["b_gates"].astype(jnp.float32)
+    i_t, f_t = jnp.split(gates, 2, axis=-1)
+    state, h = _mlstm_step(cache["state"], q, k, v, i_t, f_t)
+    h = h.reshape(-1, 1, d_inner).astype(x.dtype)
+    h = rms_norm(h, p["norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    y = jnp.einsum("bse,ed->bsd", h, p["down_proj"].astype(x.dtype))
+    return y, {"state": state, "conv": window[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_param_spec(cfg: ModelConfig) -> Dict[str, P.Leaf]:
+    d = cfg.d_model
+    H = cfg.n_heads
+    Pd = d // H
+    f_ff = int(d * cfg.xlstm.proj_factor_slstm)
+    return {
+        # input weights for z,i,f,o (4*d) and recurrent block-diagonal R per
+        # gate: (4, H, Pd, Pd)
+        "w_in": P.Leaf((d, 4 * d), ("embed", None), fan_in=d),
+        "r": P.Leaf((4, H, Pd, Pd), (None, "heads", "head_dim", "head_dim"), fan_in=Pd),
+        "b": P.Leaf((4 * d,), (None,), init="zeros"),
+        "norm": P.Leaf((d,), ("embed",), init="ones"),
+        "ffn_up": P.Leaf((d, 2 * f_ff), ("embed", "mlp"), fan_in=d),
+        "ffn_down": P.Leaf((f_ff, d), ("mlp", "embed"), fan_in=f_ff),
+    }
+
+
+def _slstm_step(p, state, wx, cfg: ModelConfig):
+    """state: (c, n, h, m) each (B, d) [m: (B, d)]; wx: (B, 4*d) precomputed
+    input contribution for this step."""
+    d = cfg.d_model
+    H = cfg.n_heads
+    Pd = d // H
+    c, n, h, m = state
+    hh = h.reshape(-1, H, Pd)
+    r = p["r"].astype(jnp.float32)
+    rec = jnp.einsum("bhp,ghpq->bghq", hh.astype(jnp.float32), r).reshape(-1, 4 * d)
+    pre = wx.astype(jnp.float32) + rec + p["b"].astype(jnp.float32)
+    z_t, i_t, f_t, o_t = jnp.split(pre, 4, axis=-1)
+    f_log = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(f_log + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_log + m - m_new)
+    c = f_p * c + i_p * jnp.tanh(z_t)
+    n = f_p * n + i_p
+    h = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1.0)
+    return (c, n, h, m_new)
+
+
+def slstm_forward(p, x, cfg: ModelConfig, ec: ExecConfig, state=None):
+    """x: (B, S, d) -> (y, final_state). Sequential scan over S."""
+    B, S, d = x.shape
+    wx = jnp.einsum("bsd,dg->bsg", x, p["w_in"].astype(x.dtype))
+    if state is None:
+        state = slstm_init_state(cfg, B)
+
+    if ec.use_pallas and S % 16 == 0:
+        # Pallas kernel: recurrent weights stay VMEM-resident across the
+        # time grid (the §Perf-identified fix for the per-step R re-reads)
+        from repro.kernels import ops
+        hs_k, state = ops.slstm_scan(wx, p["r"], p["b"], state,
+                                     n_heads=cfg.n_heads, chunk=16,
+                                     interpret=ec.interpret)
+        hs = hs_k.swapaxes(0, 1)
+    else:
+        def body(st, wxt):
+            st = _slstm_step(p, st, wxt, cfg)
+            return st, st[2]                            # emit h
+
+        unroll = max(getattr(ec, "slstm_unroll", 1), 1)
+        state, hs = jax.lax.scan(body, state, wx.swapaxes(0, 1),
+                                 unroll=unroll if S % unroll == 0 else 1)
+    h = hs.swapaxes(0, 1).astype(x.dtype)               # (B,S,d)
+    h = rms_norm(h, p["norm"], cfg.norm_eps)
+    up = jnp.einsum("bsd,df->bsf", h, p["ffn_up"].astype(x.dtype))
+    g, u = jnp.split(up, 2, axis=-1)
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g) * u, p["ffn_down"].astype(x.dtype))
+    return y, state
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return (z(), z(), z(), jnp.full((batch, d), -1e9, jnp.float32))
+
+
+def slstm_decode_step(p, x, state, cfg: ModelConfig):
+    """x: (B, 1, d)."""
+    wx = jnp.einsum("bsd,dg->bsg", x, p["w_in"].astype(x.dtype))[:, 0]
+    state = _slstm_step(p, state, wx, cfg)
+    h = state[2][:, None].astype(x.dtype)
+    h = rms_norm(h, p["norm"], cfg.norm_eps)
+    up = jnp.einsum("bsd,df->bsf", h, p["ffn_up"].astype(x.dtype))
+    g, u = jnp.split(up, 2, axis=-1)
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g) * u, p["ffn_down"].astype(x.dtype))
+    return y, state

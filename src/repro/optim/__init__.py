@@ -1,0 +1,3 @@
+from repro.optim.rmsprop import centered_rmsprop  # noqa: F401
+from repro.optim.adamw import adamw  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401

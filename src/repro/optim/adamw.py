@@ -1,0 +1,38 @@
+"""AdamW with decoupled weight decay, schedule, and global-norm clipping —
+the LLM-path optimizer. Optimizer state is f32 and shaped like params, so
+it inherits the params' PartitionSpecs (incl. the fsdp variant)."""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, clip_by_global_norm
+
+
+def adamw(learning_rate: Union[float, Callable[[jax.Array], jax.Array]],
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, grad_clip: Optional[float] = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": zeros(), "v": zeros(), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = learning_rate(step) if callable(learning_rate) else learning_rate
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip is not None:
+            g32, _ = clip_by_global_norm(g32, grad_clip)
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], g32)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], g32)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        updates = jax.tree.map(
+            lambda m, v, p: -lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                                   + weight_decay * p.astype(jnp.float32)),
+            m, v, params)
+        return updates, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)

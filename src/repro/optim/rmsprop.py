@@ -1,0 +1,38 @@
+"""Centered RMSProp exactly as used by DQN (Mnih et al. 2015; Hinton
+lecture 6a), the paper's optimizer: decay 0.95 on both first and second
+moments, eps 0.01 added inside the sqrt denominator.
+
+    g_t  = rho * g_{t-1}  + (1-rho) * grad
+    s_t  = rho * s_{t-1}  + (1-rho) * grad^2
+    p   -= lr * grad / sqrt(s_t - g_t^2 + eps)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def centered_rmsprop(learning_rate: float, decay: float = 0.95,
+                     eps: float = 0.01, centered: bool = True) -> Optimizer:
+    def init(params):
+        zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"s": zeros(), "g": zeros()} if centered else {"s": zeros()}
+
+    def update(grads, state, params):
+        del params
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        s = jax.tree.map(lambda s, g: decay * s + (1 - decay) * g * g, state["s"], g32)
+        if centered:
+            m = jax.tree.map(lambda m, g: decay * m + (1 - decay) * g, state["g"], g32)
+            denom = jax.tree.map(lambda s, m: jnp.sqrt(s - m * m + eps), s, m)
+            new_state = {"s": s, "g": m}
+        else:
+            denom = jax.tree.map(lambda s: jnp.sqrt(s + eps), s)
+            new_state = {"s": s}
+        updates = jax.tree.map(lambda g, d: -learning_rate * g / d, g32, denom)
+        return updates, new_state
+
+    return Optimizer(init, update)

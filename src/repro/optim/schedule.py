@@ -1,0 +1,24 @@
+"""LR schedules + the paper's epsilon-greedy annealing schedule."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def linear_epsilon(start: float, end: float, anneal_steps: int):
+    """Mnih et al. 2015: linear 1.0 -> 0.1 over the first 1M steps."""
+    def eps(step):
+        frac = jnp.clip(step.astype(jnp.float32) / anneal_steps, 0.0, 1.0)
+        return start + (end - start) * frac
+    return eps

@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (HW, collective_bytes, roofline_terms,  # noqa: F401
+                                     model_flops)

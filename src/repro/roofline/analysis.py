@@ -1,0 +1,106 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Hardware model (TPU v5e, per chip):
+  197 TFLOP/s bf16  |  819 GB/s HBM  |  ~50 GB/s/link ICI.
+
+``compiled.cost_analysis()`` on an SPMD module reports **per-device**
+flops / bytes (verified empirically: a 512-way-sharded matmul reports
+1/512 of the global flops), so
+
+  compute term    = flops_per_device / peak_flops
+  memory term     = bytes_per_device / hbm_bw
+  collective term = collective_bytes_per_device / ici_bw
+
+collective_bytes is not in cost_analysis; we parse the compiled
+(post-partitioning, per-device) HLO text and sum the *result* shapes of
+every collective op, weighted by a ring-cost factor: all-reduce moves
+~2x its payload (reduce-scatter + all-gather); the others ~1x. This is a
+first-order model — good enough to identify the dominant term and track
+deltas across perf iterations, which is what §Perf optimizes.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+HW = {
+    "peak_flops": 197e12,   # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,        # bytes/s per chip
+    "ici_bw": 50e9,         # bytes/s per link
+}
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_COST_FACTOR = {"all-reduce": 2.0}
+
+# one result tensor: dtype[d0,d1,...]  (layout braces optional)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+(" + "|".join(COLLECTIVES) +
+    r")(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective traffic by op kind (cost-weighted bytes).
+    ``-done`` ops are skipped so async pairs are not double-counted."""
+    out: Dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+    for m in _OP_LINE_RE.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2)
+        if "-done(" in m.group(0):
+            continue
+        out[op] += _shape_bytes(shapes) * _COST_FACTOR.get(op, 1.0)
+    return out
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   coll_bytes: float) -> Dict[str, float]:
+    t_compute = flops_per_device / HW["peak_flops"]
+    t_memory = bytes_per_device / HW["hbm_bw"]
+    t_coll = coll_bytes / HW["ici_bw"]
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    return {"compute_s": t_compute, "memory_s": t_memory,
+            "collective_s": t_coll, "dominant": dominant}
+
+
+def model_flops(cfg, tokens: int, kind: str,
+                param_counts: Optional[Dict[str, int]] = None) -> float:
+    """Useful model FLOPs: 6·N·D for training, 2·N·D for inference, with
+    N = active parameters (MoE experts scaled by top_k/n_experts)."""
+    from repro.models import params as PM
+    from repro.models.transformer import model_param_spec
+
+    spec = model_param_spec(cfg)
+    total = 0
+    active = 0
+    for path, leaf in PM._leaves(spec):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        if "experts" in leaf.axes and cfg.moe is not None:
+            active += n * cfg.moe.top_k / cfg.moe.n_experts
+        else:
+            active += n
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * active * tokens, total, active

@@ -1,0 +1,428 @@
+"""HLO cost walker — roofline terms from compiled SPMD modules.
+
+XLA-CPU's built-in ``compiled.cost_analysis()`` counts a while-loop body
+ONCE, ignoring the trip count (verified empirically) — useless for our
+scan-over-layers programs. This module re-derives per-device costs by
+walking the compiled HLO text:
+
+  * flops: ``dot`` ops cost 2 x |result| x contracted-dim product
+    (the MXU work); elementwise arithmetic costs |result|; ``reduce``
+    costs |operand|;
+  * memory bytes: every top-level op moves its operands + result through
+    HBM; ops *inside* a fusion move nothing (that is what fusion means) —
+    a first-order XLA-TPU memory model;
+  * collective bytes: result sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute, all-reduce weighted
+    2x (ring reduce-scatter + all-gather);
+  * control flow: while bodies multiply by ``known_trip_count`` (from
+    backend_config); fusion/call recurse; conditionals take the max
+    branch.
+
+The module text is the post-partitioning per-device program, so all
+results are per-device — exactly what the roofline denominators
+(per-chip peak flops / HBM bw / ICI bw) expect.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_COLL_FACTOR = {"all-reduce": 2.0}
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "sine", "cosine", "rsqrt", "sqrt",
+    "negate", "abs", "select", "compare", "and", "or", "xor", "not",
+    "floor", "ceil", "round-nearest-afz", "sign", "clamp", "atan2",
+    "exponential-minus-one", "log-plus-one", "logistic", "cbrt",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _parse_assign(line: str):
+    """Parse '%name = SHAPE opkind(rest' with balanced-paren tuple shapes
+    (which may contain /*index=N*/ comments and '=' characters)."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[:eq].strip()
+    rest = s[eq + 3:]
+    if rest.startswith("("):            # tuple shape: find matching paren
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        shape, rest = rest[: i + 1], rest[i + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape, rest = rest[:sp], rest[sp + 1:].lstrip()
+    par = rest.find("(")
+    if par <= 0:
+        return None
+    kind = rest[:par]
+    if not re.fullmatch(r"[a-z][a-z0-9\-]*", kind):
+        return None
+    return name, shape, kind, rest[par + 1:]
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALLS_RE = re.compile(r"(?:calls|body|to_apply)=(%[\w.\-]+)")
+_COND_RE = re.compile(r"branch_computations=\{([^}]*)\}|(?:true_computation=(%[\w.\-]+), false_computation=(%[\w.\-]+))")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[float, float]:
+    elems = bytes_ = 0.0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1.0
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * DTYPE_BYTES[dtype]
+    return elems, bytes_
+
+
+def _first_shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    kind: str
+    rest: str            # everything after the opening paren
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+class _Reads:
+    """Per-computation-execution read-traffic ledger.
+
+    Each HBM buffer is charged once per execution of its computation
+    (multiple consumers of the same value share one read — the
+    first-order behaviour of XLA's fusion/buffer pipeline), except
+    *slice* reads (dynamic-slice / gather), which touch disjoint regions
+    per call and therefore accumulate."""
+
+    def __init__(self):
+        self.full: Dict[str, float] = {}
+        self.sliced = 0.0
+
+    def read_full(self, name: str, nbytes: float):
+        if nbytes > self.full.get(name, -1.0):
+            self.full[name] = nbytes
+
+    def read_slice(self, nbytes: float):
+        self.sliced += nbytes
+
+    def total(self) -> float:
+        return sum(self.full.values()) + self.sliced
+
+
+def parse_module(text: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and line.rstrip().endswith("{"):
+            cur = hdr.group(1)
+            comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        parsed = _parse_assign(line)
+        if parsed:
+            comps[cur].append(Op(*parsed))
+    return comps
+
+
+def _operands(rest: str) -> List[str]:
+    """First-level operand names of `op(...)...` ."""
+    out, depth, token = [], 0, []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+            continue
+        if ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+            continue
+        if ch == "," and depth == 0:
+            out.append("".join(token).strip())
+            token = []
+        else:
+            token.append(ch)
+    if token:
+        out.append("".join(token).strip())
+    return [t for t in out if t.startswith("%")]
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self.shapes: Dict[str, str] = {}
+        for ops in self.comps.values():
+            for op in ops:
+                self.shapes[op.name] = op.shape
+        self._memo: Dict[str, Cost] = {}
+        # entry computation = the one defined with ENTRY; approximate as the
+        # computation that no other computation calls
+        called = set()
+        for ops in self.comps.values():
+            for op in ops:
+                for m in _CALLS_RE.finditer(op.rest):
+                    called.add(m.group(1))
+        entries = [c for c in self.comps if c not in called]
+        self.entry = entries[-1] if entries else list(self.comps)[-1]
+
+    # ------------------------------------------------------------------
+    def cost(self) -> Cost:
+        return self.comp_cost(self.entry, top_level=True)
+
+    def comp_cost(self, name: str, top_level: bool = False) -> Cost:
+        key = f"{name}|{top_level}"
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        reads = _Reads()
+        writes = 0.0
+        for op in self.comps.get(name, []):
+            w = self._op_cost(op, total, reads, top_level)
+            writes += w
+        total.bytes += reads.total() + writes
+        self._memo[key] = total
+        return total
+
+    _FREE = ("parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "iota", "after-all", "partition-id", "replica-id")
+
+    def _op_cost(self, op: Op, c: Cost, reads: _Reads, top_level: bool) -> float:
+        """Accumulate flops/collectives into ``c`` and reads into the
+        ledger; return this op's write bytes."""
+        elems, rbytes = _shape_elems_bytes(op.shape)
+        kind = op.kind
+
+        if kind == "while":
+            m = _TRIP_RE.search(op.rest)
+            trip = int(m.group(1)) if m else 1
+            body = re.search(r"body=(%[\w.\-]+)", op.rest)
+            if body:
+                c.add(self.comp_cost(body.group(1), top_level), trip)
+            return 0.0
+        if kind in ("fusion", "call", "async-start"):
+            m = _CALLS_RE.search(op.rest)
+            if m:
+                inner = self.comp_cost(m.group(1), top_level=False)
+                c.flops += inner.flops
+                for k, v in inner.coll.items():
+                    c.coll[k] = c.coll.get(k, 0.0) + v
+                # fusion-aware I/O: a fused dynamic-slice touches only its
+                # slice of the operand (e.g. one layer of a stacked scan
+                # parameter), and a fused dynamic-update-slice root writes
+                # only the updated slice (the buffer is aliased in place)
+                pr, wbytes = self._fusion_io(m.group(1))
+                for i, o in enumerate(_operands(op.rest)):
+                    mode = pr.get(i, ("full", None))
+                    if mode[0] == "slice":
+                        reads.read_slice(mode[1])
+                    else:
+                        _, b = _shape_elems_bytes(self.shapes.get(o, ""))
+                        reads.read_full(o, b)
+                return wbytes if wbytes is not None else rbytes
+            self._read_operands(op, reads)
+            return rbytes
+        if kind == "conditional":
+            branches = re.findall(r"(%[\w.\-]+)", op.rest.split("),")[-1])
+            sub = [self.comp_cost(b) for b in branches if b in self.comps]
+            if sub:
+                best = max(sub, key=lambda s: s.flops + s.bytes)
+                c.add(best)
+            self._read_operands(op, reads)
+            return rbytes
+
+        if kind in COLLECTIVES or any(kind == f"{x}-start" for x in COLLECTIVES):
+            base = kind.replace("-start", "")
+            c.coll[base] = c.coll.get(base, 0.0) + rbytes * _COLL_FACTOR.get(base, 1.0)
+            self._read_operands(op, reads)
+            return rbytes
+
+        if kind == "dot":
+            contract = 1.0
+            m = _CONTRACT_RE.search(op.rest)
+            ops_ = _operands(op.rest)
+            if m and ops_:
+                lhs_dims = _first_shape_dims(self.shapes.get(ops_[0], ""))
+                for idx in (int(i) for i in m.group(1).split(",") if i):
+                    if idx < len(lhs_dims):
+                        contract *= lhs_dims[idx]
+            c.flops += 2.0 * elems * contract
+            self._read_operands(op, reads)
+            return rbytes
+        if kind == "convolution":
+            ops_ = _operands(op.rest)
+            k = 1.0
+            if len(ops_) > 1:
+                rdims = _first_shape_dims(self.shapes.get(ops_[1], ""))
+                for d in rdims[:-1]:
+                    k *= d
+            c.flops += 2.0 * elems * k
+            self._read_operands(op, reads)
+            return rbytes
+
+        if kind in ("dynamic-slice", "gather"):
+            # touches only the sliced region of its operand
+            reads.read_slice(rbytes)
+            return rbytes
+        if kind == "dynamic-update-slice":
+            # in-place with donated buffers: traffic = the updated slice
+            upd = _operands(op.rest)
+            if len(upd) > 1:
+                _, ub = _shape_elems_bytes(self.shapes.get(upd[1], ""))
+                reads.read_slice(ub)
+                return ub
+            return 0.0
+        if kind == "scatter":
+            upd = _operands(op.rest)
+            if len(upd) > 2:
+                _, ub = _shape_elems_bytes(self.shapes.get(upd[2], ""))
+                reads.read_slice(2.0 * ub)   # read-modify-write of targets
+                return ub
+            return rbytes
+
+        if kind in ("reduce", "reduce-window"):
+            c.flops += self._operand_elems(op)
+        elif kind in ELEMENTWISE:
+            c.flops += elems
+        if kind in self._FREE:
+            return 0.0
+        self._read_operands(op, reads)
+        return rbytes
+
+    def _fusion_io(self, comp_name: str):
+        """Classify a fused computation's parameter reads and root write.
+
+        Returns (param_reads, write_bytes):
+          param_reads: index -> ("slice", bytes) if every direct use of the
+            parameter is a dynamic-slice/gather (charge slice results), or
+            ("full", None);
+          write_bytes: updated-slice bytes if the root is (a tuple of)
+            dynamic-update-slice (in-place alias), else None (= result).
+        """
+        key = f"io|{comp_name}"
+        if key in self._memo:
+            return self._memo[key]
+        ops = self.comps.get(comp_name, [])
+        param_idx: Dict[str, int] = {}
+        for op in ops:
+            if op.kind == "parameter":
+                m = re.match(r"\s*(\d+)", op.rest)
+                if m:
+                    param_idx[op.name] = int(m.group(1))
+        uses: Dict[str, list] = {}
+        by_name = {op.name: op for op in ops}
+        for op in ops:
+            for o in _operands(op.rest):
+                if o in param_idx:
+                    uses.setdefault(o, []).append(op)
+        param_reads = {}
+        for pname, idx in param_idx.items():
+            us = uses.get(pname, [])
+            if us and all(u.kind in ("dynamic-slice", "gather") for u in us):
+                total = 0.0
+                for u in us:
+                    _, b = _shape_elems_bytes(u.shape)
+                    total += b
+                param_reads[idx] = ("slice", total)
+            elif us and all(u.kind == "dynamic-update-slice" and
+                            _operands(u.rest)[:1] == [pname] for u in us):
+                # in-place update target: read-modify-write of the slice
+                total = 0.0
+                for u in us:
+                    o2 = _operands(u.rest)
+                    if len(o2) > 1:
+                        _, b = _shape_elems_bytes(self.shapes.get(o2[1], u.shape))
+                        total += b
+                param_reads[idx] = ("slice", total)
+            elif not us:
+                param_reads[idx] = ("slice", 0.0)
+            else:
+                param_reads[idx] = ("full", None)
+        # root write
+        write_bytes = None
+        roots = [ops[-1]] if ops else []
+        if roots and roots[0].kind == "tuple":
+            roots = [by_name[o] for o in _operands(roots[0].rest) if o in by_name]
+        if roots and all(r.kind == "dynamic-update-slice" for r in roots):
+            write_bytes = 0.0
+            for r in roots:
+                o2 = _operands(r.rest)
+                if len(o2) > 1:
+                    _, b = _shape_elems_bytes(self.shapes.get(o2[1], r.shape))
+                    write_bytes += b
+        self._memo[key] = (param_reads, write_bytes)
+        return param_reads, write_bytes
+
+    def _read_operands(self, op: Op, reads: _Reads):
+        for o in _operands(op.rest):
+            _, b = _shape_elems_bytes(self.shapes.get(o, ""))
+            reads.read_full(o, b)
+
+    def _operand_elems(self, op: Op) -> float:
+        total = 0.0
+        for o in _operands(op.rest):
+            e, _ = _shape_elems_bytes(self.shapes.get(o, ""))
+            total += e
+        return total
+
+
+def analyze_text(text: str) -> Dict[str, float]:
+    c = HloCostModel(text).cost()
+    return {"flops": c.flops, "bytes": c.bytes, "collectives": dict(c.coll),
+            "collective_bytes": c.coll_bytes}

@@ -1,0 +1,2 @@
+from repro.sharding.rules import (logical_rules, batch_axes, param_shardings,  # noqa: F401
+                                  input_shardings, cache_shardings)

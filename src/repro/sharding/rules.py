@@ -1,0 +1,163 @@
+"""Logical-axis -> mesh-axis sharding rules, per (architecture, mesh).
+
+Every parameter leaf carries logical axis names (models/params.py); this
+module decides which map onto the `model` / `data` / `pod` mesh axes,
+respecting divisibility (a non-divisible dimension is replicated — e.g.
+granite-20b's single KV head, whisper's 6 heads, qwen2-moe's 60 experts
+on a 16-way model axis). Activation sharding is left to GSPMD
+propagation from the parameter and input shardings.
+
+Baseline scheme (recorded as such in EXPERIMENTS.md):
+  vocab/mlp/heads/experts -> model;  batch -> (pod, data);  rest replicated.
+Beyond-paper variants (perf iterations):
+  fsdp: embed-axis params also shard over `data` (ZeRO-3 style);
+  expert padding: see sharding/expert_parallel.py.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models import params as PM
+from repro.models.layers import ExecConfig, round_up
+from repro.models.ssm import ssm_dims
+from repro.models.xlstm import mlstm_dims
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def logical_rules(cfg: ModelConfig, mesh: Mesh,
+                  ec: ExecConfig) -> Dict[str, Optional[str]]:
+    m = _axis_size(mesh, "model")
+    d = _axis_size(mesh, "data")
+    hd = cfg.resolved_head_dim
+    vpad = round_up(cfg.vocab, ec.vocab_pad)
+
+    def fits(n: int) -> bool:
+        return m > 1 and n % m == 0
+
+    rules: Dict[str, Optional[str]] = {
+        "vocab": "model" if fits(vpad) else None,
+        "mlp": "model" if (cfg.d_ff and fits(_shared_mlp_width(cfg))) else None,
+        "heads_flat": "model" if fits(cfg.n_heads) else None,
+        "kv_flat": "model" if fits(cfg.n_kv_heads) else None,
+        "embed": None,
+        "pos": None,
+        "conv": None,
+    }
+    if ec.kv_seq_shard:
+        # flash-decoding partition: the model axis works on the cache
+        # sequence dim, so attention heads must stay replicated — sharded
+        # q heads vs L-sharded caches otherwise force GSPMD to all-gather
+        # the whole cache every layer (observed: 2 x 1 GiB all-gathers)
+        rules["heads_flat"] = None
+        rules["kv_flat"] = None
+    if cfg.moe is not None:
+        from repro.models.moe import padded_experts
+        rules["experts_logits"] = None        # router output dim
+        if ec.moe_impl == "expert_parallel" and fits(padded_experts(cfg.moe)):
+            # §Perf expert-parallel: shard the (padded) expert stacks;
+            # per-expert mlp dim stays local to its owner rank
+            rules["experts"] = "model"
+            rules["expert_mlp"] = None
+        elif fits(cfg.moe.n_experts):
+            rules["experts"] = "model"
+            rules["expert_mlp"] = None
+        else:
+            rules["experts"] = None
+            rules["expert_mlp"] = "model" if fits(cfg.d_ff) else None
+    if cfg.ssm is not None:
+        d_inner, H, Pd, N = ssm_dims(cfg)
+        conv_ch = d_inner + 2 * N
+        rules["ssm_inner"] = "model" if fits(d_inner) else None
+        rules["ssm_conv"] = "model" if fits(conv_ch) else None
+        rules["ssm_heads"] = "model" if fits(H) else None
+    if cfg.xlstm is not None:
+        d_inner, H, Pd = mlstm_dims(cfg)
+        rules["ssm_inner"] = "model" if fits(d_inner) else None
+        rules["conv"] = None
+        rules["heads"] = "model" if fits(cfg.n_heads) else None
+        rules["head_dim"] = None
+    if ec.fsdp and d > 1 and cfg.d_model % d == 0:
+        rules["embed"] = "data"
+    return rules
+
+
+def _shared_mlp_width(cfg: ModelConfig) -> int:
+    if cfg.moe is not None and cfg.moe.n_shared_experts:
+        return cfg.d_ff * cfg.moe.n_shared_experts
+    if cfg.xlstm is not None:
+        return int(cfg.d_model * cfg.xlstm.proj_factor_slstm)
+    return cfg.d_ff
+
+
+def batch_axes(mesh: Mesh, global_batch: int) -> Optional[Tuple[str, ...]]:
+    """Largest prefix of (pod, data) whose product divides the batch."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    chosen = []
+    prod = 1
+    for a in axes:
+        if global_batch % (prod * mesh.shape[a]) == 0:
+            chosen.append(a)
+            prod *= mesh.shape[a]
+    return tuple(chosen) if chosen else None
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, ec: ExecConfig):
+    """NamedSharding tree matching model_param_spec(cfg)."""
+    from repro.models.transformer import model_param_spec
+    rules = logical_rules(cfg, mesh, ec)
+    spec_tree = PM.partition_tree(model_param_spec(cfg, ec), rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def input_shardings(cfg: ModelConfig, mesh: Mesh, global_batch: int,
+                    with_memory: bool):
+    b = batch_axes(mesh, global_batch)
+    tok = NamedSharding(mesh, P(b, None))
+    out = {"tokens": tok, "labels": tok,
+           "mask": NamedSharding(mesh, P(b, None))}
+    if with_memory:
+        out["memory"] = NamedSharding(mesh, P(b, None, None))
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, ec: ExecConfig,
+                    global_batch: int, cache_tree):
+    """Shard a decode cache: batch dim over (pod, data); head-like dims
+    over model when divisible. The cache tree layout is
+    (n_superblocks, batch, ...) for layer entries; scalars replicated."""
+    m = _axis_size(mesh, "model")
+    b = batch_axes(mesh, global_batch)
+    kv_ok = m > 1 and cfg.n_kv_heads % m == 0
+
+    def spec_for(leaf) -> P:
+        shp = leaf.shape
+        if len(shp) == 0 or shp[0] != cfg.n_superblocks:
+            return P()
+        rest = shp[1:]
+        if len(rest) == 4 and rest[1] == cfg.n_kv_heads:     # (B, Hkv, L, hd)
+            if ec.kv_seq_shard and m > 1 and rest[2] % m == 0:
+                # flash-decoding style: partition the cache sequence dim
+                # over `model`; attention reduces partially per shard and
+                # GSPMD all-reduces the (B,H)-sized softmax stats
+                return P(None, b, None, "model", None)
+            return P(None, b, "model" if kv_ok else None, None, None)
+        if cfg.ssm is not None:
+            H = ssm_dims(cfg)[1]
+            if len(rest) >= 2 and rest[1] == H and H % m == 0 and m > 1:
+                return P(None, b, "model", *([None] * (len(rest) - 2)))
+        if cfg.xlstm is not None:
+            H = cfg.n_heads
+            if len(rest) >= 2 and rest[1] == H and H % m == 0 and m > 1:
+                return P(None, b, "model", *([None] * (len(rest) - 2)))
+        return P(None, b, *([None] * (len(rest) - 1)))
+
+    return jax.tree.map(lambda l: NamedSharding(mesh, spec_for(l)), cache_tree)

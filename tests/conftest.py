@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _cpu_config():
+    # smoke tests and benches see the real device count (1), never 512 —
+    # only launch/dryrun.py sets xla_force_host_platform_device_count.
+    assert jax.default_backend() == "cpu"
+    yield

@@ -1,0 +1,60 @@
+"""Generalized actor-learner (the paper's technique on an assigned LLM
+architecture): mechanics + reward improvement."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import reduced_config
+from repro.core.actor_learner import (ALConfig, make_actor_learner,
+                                      synthetic_reward)
+from repro.models.layers import ExecConfig
+
+
+def test_synthetic_reward_bounds_and_signal():
+    toks = jnp.concatenate([jnp.full((2, 8), 3, jnp.int32),
+                            jnp.full((2, 8), 8, jnp.int32)], axis=1)  # 8 ≡ 1 mod 7
+    r = synthetic_reward(toks, 8, 7, target=1)
+    assert float(r.min()) == 1.0
+    toks2 = toks.at[:, 8:].set(4)
+    r2 = synthetic_reward(toks2, 8, 7, target=1)
+    assert float(r2.max()) == 0.0
+
+
+@pytest.mark.slow
+def test_actor_learner_cycle_improves_reward():
+    cfg = reduced_config("starcoder2-3b")
+    ec = ExecConfig(compute_dtype="float32", remat=False)
+    al = ALConfig(n_streams=8, prompt_len=6, gen_len=10, replay_capacity=128,
+                  updates_per_cycle=8, minibatch=16, learning_rate=3e-3,
+                  reward_modulus=4)
+    init, cycle = make_actor_learner(cfg, ec, al)
+    carry = init(jax.random.PRNGKey(0))
+    cycle = jax.jit(cycle)
+    rewards = []
+    for i in range(25):
+        carry, m = cycle(carry)
+        rewards.append(float(m["reward"]))
+    early = sum(rewards[:5]) / 5
+    late = sum(rewards[-5:]) / 5
+    assert all(jnp.isfinite(jnp.asarray(rewards)))
+    # reward-weighted regression toward the dominant residue class should
+    # push generations toward it: demand a visible improvement
+    assert late > early + 0.05, (early, late)
+
+
+def test_actor_uses_target_params_only():
+    """Generation within a cycle must not depend on the learner's
+    updates — the Concurrent-Training decoupling, LLM edition."""
+    cfg = reduced_config("xlstm-125m")
+    ec = ExecConfig(compute_dtype="float32", remat=False)
+    outs = {}
+    for lr in (0.0, 5e-2):
+        al = ALConfig(n_streams=4, prompt_len=4, gen_len=6,
+                      replay_capacity=32, updates_per_cycle=2, minibatch=4,
+                      learning_rate=lr)
+        init, cycle = make_actor_learner(cfg, ec, al)
+        carry = init(jax.random.PRNGKey(0))
+        carry, _ = jax.jit(cycle)(carry)
+        outs[lr] = carry.seqs[:4]
+    assert (outs[0.0] == outs[5e-2]).all()

@@ -1,0 +1,31 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+def test_roundtrip(tmp_path):
+    tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3),
+                       "stats": (jnp.ones((2,)), jnp.zeros((), jnp.int32))},
+            "step": jnp.int32(7)}
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 7, tree)
+    save_checkpoint(d, 12, tree)
+    assert latest_step(d) == 12
+    got = restore_checkpoint(d, 7, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_onto_shardings(tmp_path):
+    tree = {"w": jnp.arange(8.0)}
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, tree)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = {"w": jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("data"))}
+    got = restore_checkpoint(d, 1, tree, shardings=sh)
+    assert got["w"].sharding == sh["w"]

@@ -1,0 +1,57 @@
+"""Host-runner (Table 1 apparatus) mechanics: all four variants run, and
+the §4 transaction-count claim holds — synchronized execution makes the
+number of inference transactions independent of W."""
+
+import pytest
+
+from repro.config import DQNConfig
+from repro.configs.dqn_nature import NatureCNNConfig
+from repro.envs import get_env
+from repro.models.nature_cnn import q_forward, q_init
+from repro.core.host_runner import HostDQNRunner
+
+import jax
+
+FS = 10
+STEPS = 64
+
+
+def _runner(concurrent, synchronized, W):
+    spec = get_env("catch")
+    ncfg = NatureCNNConfig(frame_size=FS, frame_stack=2, convs=((8, 3, 1),),
+                           hidden=16, n_actions=spec.n_actions)
+    dcfg = DQNConfig(minibatch_size=8, replay_capacity=1024,
+                     target_update_period=32, train_period=4,
+                     n_envs=W, frame_stack=2)
+    params = q_init(ncfg, spec.n_actions, jax.random.PRNGKey(0))
+    qf = lambda p, o: q_forward(p, o, ncfg)
+    return HostDQNRunner(qf, params, dcfg, concurrent=concurrent,
+                         synchronized=synchronized, n_envs=W,
+                         frame_size=FS, seed=0)
+
+
+@pytest.mark.parametrize("concurrent", [False, True])
+@pytest.mark.parametrize("synchronized", [False, True])
+def test_variants_run(concurrent, synchronized):
+    r = _runner(concurrent, synchronized, W=4)
+    res = r.run(STEPS, prepopulate=64)
+    assert res.steps == STEPS
+    assert res.update_transactions >= STEPS // 4
+    assert res.seconds > 0
+
+
+def test_synchronized_transactions_independent_of_w():
+    per_w = {}
+    for W in (2, 8):
+        r = _runner(concurrent=False, synchronized=True, W=W)
+        res = r.run(STEPS, prepopulate=32)
+        per_w[W] = res.inference_transactions
+    # one batched call per W env steps -> total calls == steps / W (+warmup)
+    assert per_w[2] > per_w[8]
+    assert abs(per_w[8] - (STEPS // 8 + 1)) <= 2
+
+
+def test_standard_transactions_scale_with_steps():
+    r = _runner(concurrent=False, synchronized=False, W=4)
+    res = r.run(STEPS, prepopulate=32)
+    assert abs(res.inference_transactions - (STEPS + 1)) <= 2

@@ -1,0 +1,155 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp
+oracles in kernels/ref.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-4
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,D", [
+    (2, 256, 4, 2, 64),
+    (1, 256, 4, 1, 80),      # MQA + non-128 head dim (padding path)
+    (2, 128, 2, 2, 128),
+    (1, 512, 8, 4, 64),
+])
+@pytest.mark.parametrize("window", [None, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, S, H, Hkv, D, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    out = ops.flash_attention(q, k, v, True, window, True, 128)
+    expect = ref.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True, window=window
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_flash_attention_grad_matches_ref():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64))
+    k = jax.random.normal(ks[1], (1, 128, 2, 64))
+    v = jax.random.normal(ks[2], (1, 128, 2, 64))
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(ops.flash_attention(q, k, v, True, None, True, 128) ** 2)
+
+    def loss_ref(q, k, v):
+        o = ref.flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                                v.transpose(0, 2, 1, 3))
+        return jnp.sum(o ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("B,H,Hkv,L,D", [
+    (2, 4, 2, 512, 64),
+    (1, 4, 1, 256, 80),
+    (3, 2, 2, 128, 128),
+])
+@pytest.mark.parametrize("frac", [0.3, 1.0])
+def test_decode_attention(B, H, Hkv, L, D, frac):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    kc = jax.random.normal(ks[1], (B, Hkv, L, D))
+    vc = jax.random.normal(ks[2], (B, Hkv, L, D))
+    cl = jnp.int32(max(int(L * frac), 1))
+    out = ops.decode_attention(q, kc, vc, cl, interpret=True)
+    expect = ref.decode_attention(q.reshape(B, H, D), kc, vc, cl)[:, None]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 256, 3, 8, 16, 64),
+    (1, 128, 2, 16, 8, 32),
+    (2, 64, 1, 8, 8, 64),    # chunk == S
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan(B, S, H, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N), dtype)
+    Cm = jax.random.normal(ks[4], (B, S, N), dtype)
+    y, h = ops.ssm_scan(x, dt, A, Bm, Cm, chunk, True)
+    y_ref, h_ref = ref.ssm_scan(x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1),
+                                A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref.transpose(0, 2, 1, 3), np.float32),
+                               atol=_tol(dtype) * 5, rtol=_tol(dtype) * 5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               atol=_tol(dtype) * 5, rtol=_tol(dtype) * 5)
+
+
+@pytest.mark.parametrize("shape", [(4, 64, 256), (2, 128), (1, 3, 5, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(4), shape, dtype)
+    g = jax.random.normal(jax.random.PRNGKey(5), shape[-1:])
+    out = ops.rmsnorm(x, g, 1e-5, True)
+    expect = ref.rmsnorm(x, g)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_ssd_chunk_invariance():
+    """Chunk size must not change the result (associativity of the
+    inter-chunk recurrence)."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 5)
+    B, S, H, P, N = 1, 128, 2, 8, 8
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y32, _ = ops.ssm_scan(x, dt, A, Bm, Cm, 32, True)
+    y128, _ = ops.ssm_scan(x, dt, A, Bm, Cm, 128, True)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y128),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,S,H,d,chunk", [(2, 64, 4, 32, 16), (1, 32, 2, 16, 32)])
+def test_slstm_scan_kernel(B, S, H, d, chunk):
+    """Pallas sLSTM (VMEM-resident R) vs the step recurrence."""
+    from repro.kernels import ops as kops
+    from repro.models import xlstm as XL
+    from repro.configs import reduced_config
+    import dataclasses
+    cfg = reduced_config("xlstm-125m")
+    cfg = dataclasses.replace(cfg, d_model=d, n_heads=H, n_kv_heads=H)
+    from repro.models import params as PM
+    p = PM.init_tree(XL.slstm_param_spec(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d))
+    wx = jnp.einsum("bsd,dg->bsg", x, p["w_in"])
+    st = XL.slstm_init_state(cfg, B)
+    hs_k, st_k = kops.slstm_scan(wx, p["r"], p["b"], st, n_heads=H,
+                                 chunk=chunk, interpret=True)
+    sti = st
+    hs_ref = []
+    for t in range(S):
+        sti = XL._slstm_step(p, sti, wx[:, t], cfg)
+        hs_ref.append(sti[2])
+    hs_ref = jnp.stack(hs_ref, 1)
+    np.testing.assert_allclose(np.asarray(hs_k), np.asarray(hs_ref),
+                               atol=1e-5, rtol=1e-5)
+    for a, b in zip(st_k, sti):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)

@@ -1,0 +1,62 @@
+"""Optimizer math vs closed-form references (no optax offline)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw, centered_rmsprop
+from repro.optim.base import apply_updates, clip_by_global_norm
+
+
+def test_centered_rmsprop_matches_hinton_update():
+    """One step from zero state: g=rho*0+(1-rho)grad; s likewise;
+    delta = -lr*grad/sqrt(s - g^2 + eps)."""
+    lr, rho, eps = 0.1, 0.95, 0.01
+    opt = centered_rmsprop(lr, rho, eps, centered=True)
+    p = {"w": jnp.array([1.0, -2.0])}
+    g = {"w": jnp.array([0.5, 1.5])}
+    st = opt.init(p)
+    upd, st = opt.update(g, st, p)
+    gg = (1 - rho) * np.array([0.5, 1.5])
+    ss = (1 - rho) * np.array([0.5, 1.5]) ** 2
+    want = -lr * np.array([0.5, 1.5]) / np.sqrt(ss - gg ** 2 + eps)
+    np.testing.assert_allclose(np.asarray(upd["w"]), want, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(st["s"]["w"]), ss, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(st["g"]["w"]), gg, rtol=1e-6)
+
+
+def test_adamw_first_step_is_lr_sized():
+    """With bias correction, step 1 moves by ~lr * sign(grad) (+wd)."""
+    opt = adamw(1e-2, weight_decay=0.0, grad_clip=None)
+    p = {"w": jnp.array([1.0])}
+    g = {"w": jnp.array([3.0])}
+    st = opt.init(p)
+    upd, st = opt.update(g, st, p)
+    np.testing.assert_allclose(np.asarray(upd["w"]), [-1e-2], rtol=1e-4)
+    assert int(st["step"]) == 1
+
+
+def test_adamw_decoupled_weight_decay():
+    opt = adamw(1e-2, weight_decay=0.1, grad_clip=None)
+    p = {"w": jnp.array([2.0])}
+    g = {"w": jnp.array([0.0])}
+    st = opt.init(p)
+    upd, _ = opt.update(g, st, p)
+    np.testing.assert_allclose(np.asarray(upd["w"]), [-1e-2 * 0.1 * 2.0],
+                               rtol=1e-5)
+
+
+def test_global_norm_clip():
+    g = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), 5.0, rtol=1e-6)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2)
+                         for x in jax.tree_util.tree_leaves(clipped)))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+
+
+def test_apply_updates_preserves_dtype():
+    p = {"w": jnp.zeros((2,), jnp.bfloat16)}
+    u = {"w": jnp.full((2,), 0.5, jnp.float32)}
+    out = apply_updates(p, u)
+    assert out["w"].dtype == jnp.bfloat16

@@ -1,0 +1,69 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The headline integration test: DQN with Concurrent Training +
+Synchronized Execution learns the Catch pixel environment to near-optimal
+return within a couple of minutes on CPU — the paper's "learning still
+works under the new execution framework" claim at JAX-env scale.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import DQNConfig
+from repro.configs.dqn_nature import NatureCNNConfig
+from repro.envs import get_env
+from repro.models.nature_cnn import q_forward, q_init
+from repro.optim import adamw
+from repro.core.replay import replay_init
+from repro.core.synchronized import evaluate, sampler_init
+from repro.core.concurrent import TrainerCarry, make_concurrent_cycle, prepopulate
+
+FS = 10
+
+
+@pytest.mark.slow
+def test_concurrent_dqn_learns_catch():
+    spec = get_env("catch")
+    ncfg = NatureCNNConfig(frame_size=FS, frame_stack=2,
+                           convs=((16, 3, 1), (16, 3, 1)), hidden=64,
+                           n_actions=spec.n_actions)
+    dcfg = DQNConfig(minibatch_size=32, replay_capacity=16384,
+                     target_update_period=256, train_period=2,
+                     prepopulate=2048, n_envs=8, frame_stack=2,
+                     eps_anneal_steps=6000, discount=0.9)
+    key = jax.random.PRNGKey(0)
+    qf = lambda p, o: q_forward(p, o, ncfg)
+    params = q_init(ncfg, spec.n_actions, key)
+    opt = adamw(1e-3, weight_decay=0.0)
+    replay = replay_init(dcfg.replay_capacity, (FS, FS, 2))
+    sampler = sampler_init(spec, dcfg, key, FS)
+    replay, sampler = jax.jit(
+        lambda r, s: prepopulate(spec, qf, dcfg, r, s, dcfg.prepopulate, FS)
+    )(replay, sampler)
+    cycle = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg, frame_size=FS))
+    ev = jax.jit(lambda p, k: evaluate(spec, qf, p, k, dcfg, n_episodes=64,
+                                       frame_size=FS, max_steps=15))
+    carry = TrainerCarry(params, opt.init(params), replay, sampler,
+                         jnp.int32(0))
+    random_return = float(ev(carry.params, key))
+    for i in range(30):
+        carry, metrics = cycle(carry)
+    final = float(ev(carry.params, jax.random.PRNGKey(9)))
+    # random play on catch ~= -0.4; a trained agent is >= +0.7
+    assert final > 0.5, (random_return, final)
+    assert final > random_return + 0.5
+
+
+def test_evaluation_is_deterministic():
+    spec = get_env("catch")
+    ncfg = NatureCNNConfig(frame_size=FS, frame_stack=2, convs=((8, 3, 1),),
+                           hidden=16, n_actions=spec.n_actions)
+    dcfg = DQNConfig(n_envs=4, frame_stack=2)
+    qf = lambda p, o: q_forward(p, o, ncfg)
+    params = q_init(ncfg, spec.n_actions, jax.random.PRNGKey(0))
+    ev = jax.jit(lambda p, k: evaluate(spec, qf, p, k, dcfg, n_episodes=8,
+                                       frame_size=FS, max_steps=12))
+    a = float(ev(params, jax.random.PRNGKey(5)))
+    b = float(ev(params, jax.random.PRNGKey(5)))
+    assert a == b
