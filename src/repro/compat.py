@@ -1,0 +1,95 @@
+"""JAX-version compatibility shims (mesh / shard_map surface).
+
+The repo targets the modern JAX API (``jax.shard_map``, ``jax.set_mesh``,
+``jax.sharding.AxisType``, ``jax.sharding.get_abstract_mesh``) but must
+also run on the 0.4.x series installed on CPU/GPU desktops, where those
+names either live under ``jax.experimental`` or do not exist at all.
+Every call site goes through this module instead of feature-testing jax
+inline; Pallas-specific drift lives in ``repro.kernels.compat``.
+
+Behavioural mapping on old JAX:
+  * ``shard_map(check_vma=...)``  -> ``jax.experimental.shard_map.shard_map``
+    with ``check_rep=...`` (the kwarg was renamed).
+  * ``get_abstract_mesh``         -> the thread-resource physical mesh that
+    ``with mesh:`` pushes; an empty mesh behaves like the new API's empty
+    abstract mesh (``axis_names == ()``).
+  * ``make_mesh(axis_types=auto)``-> ``jax.make_mesh`` without the kwarg
+    (0.4.x meshes are implicitly Auto).
+  * ``set_mesh(mesh)``            -> the mesh itself (``Mesh`` is a context
+    manager on 0.4.x).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence
+
+import jax
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-portable ``shard_map`` wrapper."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+def get_abstract_mesh():
+    """The mesh of the current mesh context (never None; possibly empty)."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        return getter()
+    from jax._src import mesh as mesh_lib
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def mesh_is_empty(mesh) -> bool:
+    empty = getattr(mesh, "empty", None)
+    if empty is not None:
+        return bool(empty)
+    return len(getattr(mesh, "axis_names", ())) == 0
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, devices=None):
+    """``jax.make_mesh`` with Auto axis types where the kwarg exists."""
+    kwargs = {} if devices is None else {"devices": devices}
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                                 axis_types=(axis_type.Auto,) * len(axis_names),
+                                 **kwargs)
+        except TypeError:
+            pass  # make_mesh predates the axis_types kwarg
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def set_mesh(mesh) -> contextlib.AbstractContextManager:
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return mesh  # 0.4.x Mesh is itself a context manager
+
+
+def host_device_count(requested: Optional[int] = None) -> int:
+    """Devices visible to this process (for multi-device test gating)."""
+    n = jax.device_count()
+    return n if requested is None else min(n, requested)
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict on every JAX version.
+
+    0.4.x returns a list with one properties-dict per device program;
+    newer JAX returns the dict directly. Returns {} when XLA provides no
+    analysis.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})

@@ -15,6 +15,62 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+import jax.numpy as jnp
+
+@dataclasses.dataclass(frozen=True)
+class ExecConfig:
+    """Execution-strategy knobs, orthogonal to the architecture."""
+
+    use_pallas: bool = False      # Pallas kernels for attention / SSM scan
+    interpret: bool = False       # Pallas interpret mode (CPU validation)
+    # kernel-backend request threaded to kernels/backend.py: "auto"
+    # (platform pick: TPU->mosaic, GPU->triton, CPU->ref), "pallas",
+    # "interpret", "ref", or a concrete backend name. The
+    # REPRO_KERNEL_BACKEND env var overrides this at trace time.
+    kernel_backend: str = "auto"
+    compute_dtype: str = "bfloat16"
+    remat: bool = False           # activation-checkpoint the superblock scan
+    block_q: int = 512            # q-block for the blocked-XLA attention
+    vocab_pad: int = 256          # pad vocab to a multiple (shardability)
+    # MoE dispatch: "scatter" (capacity buffers, baseline), "expert_parallel"
+    # (shard_map over the model axis, §Perf optimized) or "dense" (oracle)
+    moe_impl: str = "scatter"
+    fsdp: bool = False            # shard params/opt-state over the data axis
+    # shard decode KV caches over the model axis along the sequence dim
+    # (flash-decoding style partition; §Perf decode optimization)
+    kv_seq_shard: bool = False
+    # sLSTM scan unrolling: amortizes the recurrent-weight HBM reads over
+    # k timesteps per loop iteration (§Perf xlstm iteration 2)
+    slstm_unroll: int = 1
+    # mLSTM formulation: chunkwise-parallel (optimized) vs per-token
+    # recurrence (the paper-faithful baseline; §Perf xlstm iteration 1)
+    mlstm_chunked: bool = True
+    # decode attention: grouped GQA einsum (optimized) vs materialized
+    # KV-repeat (baseline; §Perf decode iteration)
+    decode_grouped: bool = True
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def kernel_request(self) -> str:
+        """The logical backend request the kernel ops should dispatch on.
+
+        ``use_pallas=True`` with the default ``kernel_backend='auto'``
+        asks for the Pallas family ('pallas': native where the platform
+        has one, interpret elsewhere); ``interpret=True`` narrows that to
+        the interpreter. An explicit non-auto ``kernel_backend`` wins
+        over both flags (and REPRO_KERNEL_BACKEND wins over everything,
+        inside kernels/backend.py).
+        """
+        if self.kernel_backend != "auto":
+            return self.kernel_backend
+        return "interpret" if self.interpret else "pallas"
+
+
+DEFAULT_EXEC = ExecConfig()
+
+
 # ---------------------------------------------------------------------------
 # Block kinds understood by repro.models.transformer
 # ---------------------------------------------------------------------------

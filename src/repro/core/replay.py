@@ -47,10 +47,21 @@ def replay_size(state: ReplayState) -> jax.Array:
 
 def replay_add_batch(state: ReplayState, batch: Dict[str, jax.Array]) -> ReplayState:
     """Append n transitions (the staging-buffer flush). batch leaves have
-    leading dim n. Wraps modulo capacity; oldest entries overwritten."""
+    leading dim n. Wraps modulo capacity; oldest entries overwritten.
+
+    Equivalent to appending the n transitions one at a time: when n
+    exceeds capacity, only the last ``capacity`` transitions survive (the
+    prefix would be overwritten before it could ever be sampled), so the
+    overflowing prefix is dropped up front. This also keeps the scatter
+    indices unique — with duplicates, ``.at[idx].set`` applies them in
+    undefined order."""
     cap = replay_capacity(state)
     n = batch["action"].shape[0]
-    idx = (state["cursor"] + jnp.arange(n, dtype=jnp.int32)) % cap
+    offset = jnp.arange(min(n, cap), dtype=jnp.int32)
+    if n > cap:
+        batch = {k: v[n - cap:] for k, v in batch.items()}
+        offset = offset + (n - cap)
+    idx = (state["cursor"] + offset) % cap
     new = dict(state)
     for k in ("obs", "action", "reward", "next_obs", "done"):
         new[k] = state[k].at[idx].set(batch[k].astype(state[k].dtype))

@@ -1,0 +1,157 @@
+"""Kernel-backend registry and dispatch.
+
+The paper's premise is commodity hardware: the same model code must run
+on a TPU pod, a single GTX-class GPU, or a laptop CPU.  Each custom op
+(`flash_attention`, `decode_attention`, `rmsnorm`, `ssm_scan`,
+`slstm_scan`) therefore has up to four executable backends:
+
+  ==========  ============================================================
+  backend     what runs
+  ==========  ============================================================
+  mosaic      Pallas lowered through TPU Mosaic (TPU hosts)
+  triton      Pallas lowered through GPU Triton (CUDA/ROCm hosts)
+  interpret   the Pallas kernel in interpreter mode (any host; validation)
+  ref         the pure-XLA oracle in ``kernels/ref.py`` (any host)
+  ==========  ============================================================
+
+Selection is resolved **at trace time** from three inputs, in decreasing
+precedence:
+
+  1. the ``REPRO_KERNEL_BACKEND`` environment variable (operator
+     override — "force `ref` on my laptop");
+  2. the request threaded from ``ExecConfig.kernel_backend``;
+  3. ``auto``: TPU -> mosaic, GPU -> triton, CPU -> ref.
+
+Logical requests (``auto`` / ``pallas``) map to a concrete backend via
+``jax.default_backend()``; a concrete backend with no registered
+implementation for an op falls back to ``ref`` (e.g. the sequential
+``slstm_scan`` has no Triton lowering), so dispatch never hard-fails on
+a missing kernel — the XLA oracle is always executable.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+MOSAIC = "mosaic"
+TRITON = "triton"
+INTERPRET = "interpret"
+REF = "ref"
+CONCRETE_BACKENDS = (MOSAIC, TRITON, INTERPRET, REF)
+
+AUTO = "auto"
+PALLAS = "pallas"
+REQUESTS = (AUTO, PALLAS) + CONCRETE_BACKENDS
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+OPS = ("flash_attention", "decode_attention", "rmsnorm", "ssm_scan",
+       "slstm_scan")
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+
+
+def register(op: str, backend: str):
+    """Decorator registering ``fn`` as the ``backend`` impl of ``op``."""
+    assert op in OPS, op
+    assert backend in (MOSAIC, TRITON, INTERPRET), backend
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY.setdefault(op, {})[backend] = fn
+        return fn
+
+    return deco
+
+
+def registered(op: str) -> Tuple[str, ...]:
+    """Concrete backends with an implementation for ``op`` (ref always)."""
+    reg = _REGISTRY.get(op, {})
+    out = [b for b in (MOSAIC, TRITON) if b in reg]
+    if INTERPRET in reg or out:
+        out.append(INTERPRET)
+    out.append(REF)
+    return tuple(out)
+
+
+def platform() -> str:
+    """Normalized accelerator platform: 'tpu' | 'gpu' | 'cpu'."""
+    p = jax.default_backend()
+    if p in ("cuda", "rocm"):
+        return "gpu"
+    return p if p in ("tpu", "gpu") else "cpu"
+
+
+def resolve(request: Optional[str] = None,
+            plat: Optional[str] = None) -> str:
+    """Resolve a logical request to a concrete backend for this host.
+
+    ``request=None`` means "no preference" (-> env var, then auto).
+    ``plat`` overrides platform detection (tests).
+    """
+    env = os.environ.get(ENV_VAR, "").strip().lower()
+    req = env or (request or AUTO).strip().lower()
+    if req not in REQUESTS:
+        raise ValueError(
+            f"unknown kernel backend {req!r}; expected one of {REQUESTS}")
+    p = plat or platform()
+    if req == AUTO:
+        return {"tpu": MOSAIC, "gpu": TRITON}.get(p, REF)
+    if req == PALLAS:
+        return {"tpu": MOSAIC, "gpu": TRITON}.get(p, INTERPRET)
+    return req
+
+
+def choose(op: str, request: Optional[str] = None,
+           plat: Optional[str] = None) -> str:
+    """Concrete backend that will actually run ``op`` on this host."""
+    assert op in OPS, op
+    b = resolve(request, plat)
+    if b == REF:
+        return REF
+    reg = _REGISTRY.get(op, {})
+    if b == INTERPRET:
+        return INTERPRET if (INTERPRET in reg or MOSAIC in reg
+                             or TRITON in reg) else REF
+    return b if b in reg else REF
+
+
+def lookup(op: str, backend: str) -> Callable:
+    """The callable implementing ``op`` on a concrete non-ref backend.
+
+    Returned callables share the registered kernel signature (kernel
+    layout, op-specific kwargs); interpret-mode partials are built here
+    so call sites never pass ``interpret=`` themselves.
+    """
+    reg = _REGISTRY.get(op, {})
+    if backend == INTERPRET:
+        if INTERPRET in reg:
+            return functools.partial(reg[INTERPRET], interpret=True)
+        impl = reg.get(MOSAIC) or reg.get(TRITON)
+        if impl is None:
+            raise KeyError(f"no interpretable kernel for {op}")
+        return functools.partial(impl, interpret=True)
+    if backend not in reg:
+        raise KeyError(f"{op} has no {backend} implementation; "
+                       f"registered: {registered(op)}")
+    return reg[backend]
+
+
+def testable_backends(op: str) -> Tuple[str, ...]:
+    """Backends exercisable on *this* host (for CI parametrization).
+
+    ``mosaic``/``triton`` compile only on their native platform; the
+    interpreter and the XLA ref run anywhere.
+    """
+    p = platform()
+    out = []
+    for b in registered(op):
+        if b == MOSAIC and p != "tpu":
+            continue
+        if b == TRITON and p != "gpu":
+            continue
+        out.append(b)
+    return tuple(out)

@@ -1,0 +1,118 @@
+"""Pallas API compatibility shims (the CompilerParams renames & friends).
+
+JAX renamed the per-backend Pallas compiler-parameter classes:
+
+  ==========  ==========================  =========================
+  backend     old name (jax <= 0.4.x)     new name (jax >= 0.5.x)
+  ==========  ==========================  =========================
+  TPU Mosaic  pltpu.TPUCompilerParams     pltpu.CompilerParams
+  GPU Triton  pltriton.TritonCompilerParams  pltriton.CompilerParams
+  ==========  ==========================  =========================
+
+The seed pinned the *new* TPU name, which raises ``AttributeError`` on
+every installed 0.4.x JAX — the bug that took down the whole kernel test
+suite.  All kernel modules now construct compiler params through this
+module; unknown kwargs are dropped (old classes reject newer knobs) so a
+kernel can always state its full intent.
+
+``interpret`` mode ignores compiler params entirely, so builders return
+``None`` there — this also avoids importing the Triton lowering on hosts
+without GPU support.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from jax.experimental.pallas import tpu as pltpu
+
+try:  # the triton module imports cleanly on CPU-only installs, but gate anyway
+    from jax.experimental.pallas import triton as pltriton
+except ImportError:  # pragma: no cover - ancient/exotic builds
+    pltriton = None
+
+
+def _construct(cls, **kwargs) -> Any:
+    """Instantiate ``cls`` dropping kwargs it does not *accept*.
+
+    Only unknown-keyword TypeErrors are absorbed; a TypeError about a
+    bad value (e.g. "num_warps must be an int") propagates — silently
+    dropping those would discard the caller's tuning intent.
+    """
+    while True:
+        try:
+            return cls(**kwargs)
+        except TypeError as e:
+            msg = str(e)
+            if "unexpected keyword argument" not in msg:
+                raise
+            dropped = None
+            for name in list(kwargs):
+                if f"'{name}'" in msg:
+                    dropped = name
+                    break
+            if dropped is None:
+                raise
+            del kwargs[dropped]
+
+
+def tpu_compiler_params(*, dimension_semantics: Optional[tuple] = None,
+                        **kwargs) -> Any:
+    """Mosaic compiler params on either side of the rename."""
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    if dimension_semantics is not None:
+        kwargs["dimension_semantics"] = tuple(dimension_semantics)
+    return _construct(cls, **kwargs)
+
+
+def gpu_compiler_params(*, num_warps: Optional[int] = None,
+                        num_stages: Optional[int] = None, **kwargs) -> Any:
+    """Triton compiler params on either side of the rename."""
+    if pltriton is None:
+        return None
+    cls = getattr(pltriton, "CompilerParams", None)
+    if cls is None:
+        cls = pltriton.TritonCompilerParams
+    if num_warps is not None:
+        kwargs["num_warps"] = num_warps
+    if num_stages is not None:
+        kwargs["num_stages"] = num_stages
+    return _construct(cls, **kwargs)
+
+
+def compiler_params(backend: str, *, interpret: bool = False,
+                    dimension_semantics: Optional[tuple] = None,
+                    num_warps: Optional[int] = None,
+                    num_stages: Optional[int] = None) -> Any:
+    """Compiler params for ``backend`` ('mosaic' | 'triton'), or ``None``.
+
+    TPU-only knobs (``dimension_semantics``) and GPU-only knobs
+    (``num_warps`` / ``num_stages``) are filtered to the matching backend,
+    so kernels can declare both and let dispatch pick.
+    """
+    if interpret:
+        return None
+    if backend == "mosaic":
+        return tpu_compiler_params(dimension_semantics=dimension_semantics)
+    if backend == "triton":
+        return gpu_compiler_params(num_warps=num_warps, num_stages=num_stages)
+    return None
+
+
+def prefetch_scalar_grid_spec(**kwargs) -> Any:
+    """``pltpu.PrefetchScalarGridSpec``, or a clear error when absent.
+
+    There is no faithful emulation without scalar prefetch (the kernel
+    arity and in_specs both assume it), so a JAX build that dropped the
+    class gets an explicit failure instead of a confusing operand-count
+    mismatch deep inside tracing.
+    """
+    cls = getattr(pltpu, "PrefetchScalarGridSpec", None)
+    if cls is None:  # pragma: no cover - future removal
+        raise NotImplementedError(
+            "this JAX build has no pltpu.PrefetchScalarGridSpec; use the "
+            "'ref' (or GPU 'triton') backend for scalar-prefetch kernels, "
+            "e.g. REPRO_KERNEL_BACKEND=ref")
+    return cls(**kwargs)

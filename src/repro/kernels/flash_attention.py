@@ -1,10 +1,10 @@
-"""Causal GQA flash attention — Pallas TPU kernel.
+"""Causal GQA flash attention — Pallas kernels (TPU Mosaic + GPU Triton).
 
-Grid: (B, H, n_q_blocks, n_k_blocks); the k-block dimension is innermost
-and iterated sequentially on a TPU core, carrying the online-softmax state
-(m, l, acc) in VMEM scratch across k-steps — the classic TPU flash
-schedule. Causal (and sliding-window) k-blocks that are fully masked are
-skipped with ``pl.when``.
+TPU schedule — grid (B, H, n_q_blocks, n_k_blocks); the k-block dimension
+is innermost and iterated sequentially on a TPU core, carrying the
+online-softmax state (m, l, acc) in VMEM scratch across k-steps — the
+classic TPU flash schedule. Causal (and sliding-window) k-blocks that are
+fully masked are skipped with ``pl.when``.
 
 VMEM working set per grid step (bq = bk = 128, D = 128, bf16 in / f32 acc):
   q (128x128x2B = 32 KiB) + k,v (64 KiB) + acc/m/l scratch (f32: 64 KiB +
@@ -12,6 +12,13 @@ VMEM working set per grid step (bq = bk = 128, D = 128, bf16 in / f32 acc):
   leaving headroom for double-buffered pipelines.
 
 MXU alignment: bq, bk, D are multiples of 128 (ops.py pads head_dim).
+
+GPU schedule — grid (B, H, n_q_blocks), every program independent (Triton
+has no sequential grid axis): each program owns one q block and walks the
+k blocks in an on-chip ``fori_loop``, carrying (m, l, acc) in registers
+and slicing K/V out of the full per-head tile with ``pl.ds``. Causal
+masking additionally clamps the loop's upper bound so fully-masked tail
+blocks are never read.
 """
 
 from __future__ import annotations
@@ -23,6 +30,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import backend as kb
+from repro.kernels import compat
 
 MASK_VALUE = float("-inf")
 M_INIT = -1e30
@@ -83,6 +93,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
 
 
+@kb.register("flash_attention", kb.MOSAIC)
 def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True, window: Optional[int] = None,
                            bq: int = 128, bk: int = 128,
@@ -119,8 +130,95 @@ def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq, 128), jnp.float32),   # l
             pltpu.VMEM((bq, D), jnp.float32),     # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
+            kb.MOSAIC, interpret=interpret,
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
     return out
+
+
+# ---------------------------------------------------------------------------
+# GPU-Triton variant
+# ---------------------------------------------------------------------------
+
+def _flash_kernel_gpu(q_ref, k_ref, v_ref, o_ref, *, scale: float, bq: int,
+                      bk: int, causal: bool, window: Optional[int],
+                      n_k_blocks: int):
+    qi = pl.program_id(2)
+    q_start = qi * bq
+    q = q_ref[0, 0].astype(jnp.float32)                # (bq, D)
+    D = q.shape[-1]
+
+    hi = n_k_blocks
+    if causal:
+        # last k block that intersects the diagonal of this q block
+        hi = jnp.minimum(n_k_blocks, (q_start + bq + bk - 1) // bk)
+    lo = 0
+    if window is not None:
+        lo = jnp.maximum(0, (q_start - window + 1) // bk)
+
+    def body(ki, carry):
+        m_prev, l_prev, acc = carry
+        k_start = ki * bk
+        k = k_ref[0, 0, pl.ds(k_start, bk), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.ds(k_start, bk), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, MASK_VALUE)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    init = (jnp.full((bq, 1), M_INIT, jnp.float32),
+            jnp.zeros((bq, 1), jnp.float32),
+            jnp.zeros((bq, D), jnp.float32))
+    _, l, acc = jax.lax.fori_loop(lo, hi, body, init)
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@kb.register("flash_attention", kb.TRITON)
+def flash_attention_kernel_gpu(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                               causal: bool = True,
+                               window: Optional[int] = None,
+                               bq: int = 128, bk: int = 128,
+                               scale: Optional[float] = None,
+                               interpret: bool = False) -> jax.Array:
+    """Same contract as :func:`flash_attention_kernel`, Triton schedule."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    n_q, n_k = S // bq, S // bk
+    if scale is None:
+        scale = D ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel_gpu, scale=scale, bq=bq, bk=bk, causal=causal,
+        window=window, n_k_blocks=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, S, D), lambda b, h, qi: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, S, D), lambda b, h, qi: (b, h // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, qi: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        compiler_params=compat.compiler_params(
+            kb.TRITON, interpret=interpret, num_warps=4, num_stages=2),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,15 +1,22 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public jit'd wrappers around the kernels, dispatched per backend.
 
 Responsibilities:
+  * backend dispatch: every op resolves a concrete backend (TPU-Mosaic
+    Pallas, GPU-Triton Pallas, Pallas interpret mode, or the pure-XLA
+    reference) through ``kernels/backend.py`` at trace time; the
+    ``backend=`` argument takes a logical request ('auto' | 'pallas' |
+    'interpret' | 'ref' | concrete name), ``None`` defers to the
+    ``REPRO_KERNEL_BACKEND`` env var and platform auto-detection;
   * model-layout <-> kernel-layout transposes (models use (B, S, H, D);
     kernels use (B, H, S, D));
   * head-dim padding to the 128-lane MXU width (the softmax scale is
     computed from the true head dim, so padding never changes the math);
   * differentiability: each op is a ``jax.custom_vjp`` whose forward runs
-    the Pallas kernel and whose backward recomputes with the pure-jnp
+    the dispatched kernel and whose backward recomputes with the pure-jnp
     reference (`ref.py`) under ``jax.vjp`` — flash-style recompute rather
     than stored attention matrices;
-  * the ``interpret`` switch used to validate on CPU.
+  * the legacy ``interpret`` flag is kept as a shorthand for
+    ``backend='interpret'`` so existing call sites / tests keep working.
 """
 
 from __future__ import annotations
@@ -20,12 +27,20 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import backend as kb
 from repro.kernels import ref
-from repro.kernels.flash_attention import flash_attention_kernel
-from repro.kernels.decode_attention import decode_attention_kernel
-from repro.kernels.ssm_scan import ssm_scan_kernel
-from repro.kernels.rmsnorm import rmsnorm_kernel
-from repro.kernels.slstm_scan import slstm_scan_kernel
+# importing the kernel modules populates the backend registry
+from repro.kernels import (decode_attention as _decode_mod,  # noqa: F401
+                           flash_attention as _flash_mod,
+                           rmsnorm as _rms_mod,
+                           slstm_scan as _slstm_mod,
+                           ssm_scan as _ssm_mod)
+
+
+def _choose(op: str, interpret: bool, backend: Optional[str]) -> str:
+    """Concrete backend for ``op`` honouring the legacy interpret flag."""
+    request = backend if backend else (kb.INTERPRET if interpret else None)
+    return kb.choose(op, request)
 
 
 def _pad_last(x: jax.Array, to: int) -> jax.Array:
@@ -41,21 +56,25 @@ def _pad_last(x: jax.Array, to: int) -> jax.Array:
 # flash attention (model layout: q (B,S,H,D), k/v (B,S,Hkv,D))
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
 def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
-                    interpret: bool = False, block: int = 128):
-    return _flash_fwd_impl(q, k, v, causal, window, interpret, block)
+                    interpret: bool = False, block: int = 128,
+                    backend: Optional[str] = None):
+    return _flash_fwd_impl(q, k, v, causal, window, interpret, block, backend)
 
 
-def _flash_fwd_impl(q, k, v, causal, window, interpret, block):
+def _flash_fwd_impl(q, k, v, causal, window, interpret, block, backend):
+    b = _choose("flash_attention", interpret, backend)
+    if b == kb.REF:
+        return _flash_ref(q, k, v, causal, window)
     B, S, H, D = q.shape
     scale = D ** -0.5
     qk = _pad_last(q.transpose(0, 2, 1, 3), 128)
     kk = _pad_last(k.transpose(0, 2, 1, 3), 128)
     vk = _pad_last(v.transpose(0, 2, 1, 3), 128)
     bq = bk = min(block, S)
-    o = flash_attention_kernel(qk, kk, vk, causal=causal, window=window,
-                               bq=bq, bk=bk, scale=scale, interpret=interpret)
+    o = kb.lookup("flash_attention", b)(
+        qk, kk, vk, causal=causal, window=window, bq=bq, bk=bk, scale=scale)
     return o[..., :D].transpose(0, 2, 1, 3)
 
 
@@ -65,11 +84,12 @@ def _flash_ref(q, k, v, causal, window):
     return o.transpose(0, 2, 1, 3)
 
 
-def _flash_fwd(q, k, v, causal, window, interpret, block):
-    return _flash_fwd_impl(q, k, v, causal, window, interpret, block), (q, k, v)
+def _flash_fwd(q, k, v, causal, window, interpret, block, backend):
+    return (_flash_fwd_impl(q, k, v, causal, window, interpret, block, backend),
+            (q, k, v))
 
 
-def _flash_bwd(causal, window, interpret, block, res, g):
+def _flash_bwd(causal, window, interpret, block, backend, res, g):
     q, k, v = res
     _, vjp = jax.vjp(lambda q, k, v: _flash_ref(q, k, v, causal, window), q, k, v)
     return vjp(g)
@@ -83,8 +103,12 @@ flash_attention.defvjp(_flash_fwd, _flash_bwd)
 # ---------------------------------------------------------------------------
 
 def decode_attention(q, k_cache, v_cache, cache_len, interpret: bool = False,
-                     block: int = 256):
+                     block: int = 256, backend: Optional[str] = None):
+    b = _choose("decode_attention", interpret, backend)
     B, _, H, D = q.shape
+    if b == kb.REF:
+        return ref.decode_attention(q.reshape(B, H, D), k_cache, v_cache,
+                                    cache_len)[:, None]
     scale = D ** -0.5
     qk = _pad_last(q[:, 0].reshape(B, H, D), 128)
     kk = _pad_last(k_cache, 128)
@@ -93,8 +117,8 @@ def decode_attention(q, k_cache, v_cache, cache_len, interpret: bool = False,
     bl = min(block, L)
     while L % bl:
         bl //= 2
-    o = decode_attention_kernel(qk, kk, vk, jnp.asarray(cache_len), bl=bl,
-                                scale=scale, interpret=interpret)
+    o = kb.lookup("decode_attention", b)(
+        qk, kk, vk, jnp.asarray(cache_len), bl=bl, scale=scale)
     return o[..., :D][:, None]                        # (B, 1, H, D)
 
 
@@ -102,16 +126,20 @@ def decode_attention(q, k_cache, v_cache, cache_len, interpret: bool = False,
 # SSD scan (model layout: x (B,S,H,P), dt (B,S,H), Bm/Cm (B,S,N))
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
-def ssm_scan(x, dt, A, Bm, Cm, chunk: int = 128, interpret: bool = False):
-    y, h = _ssm_fwd_impl(x, dt, A, Bm, Cm, chunk, interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def ssm_scan(x, dt, A, Bm, Cm, chunk: int = 128, interpret: bool = False,
+             backend: Optional[str] = None):
+    y, h = _ssm_fwd_impl(x, dt, A, Bm, Cm, chunk, interpret, backend)
     return y, h
 
 
-def _ssm_fwd_impl(x, dt, A, Bm, Cm, chunk, interpret):
+def _ssm_fwd_impl(x, dt, A, Bm, Cm, chunk, interpret, backend):
+    b = _choose("ssm_scan", interpret, backend)
+    if b == kb.REF:
+        return _ssm_ref(x, dt, A, Bm, Cm)
     xk = x.transpose(0, 2, 1, 3)                      # (B,H,S,P)
     dtk = dt.transpose(0, 2, 1)                       # (B,H,S)
-    y, h = ssm_scan_kernel(xk, dtk, A, Bm, Cm, chunk=chunk, interpret=interpret)
+    y, h = kb.lookup("ssm_scan", b)(xk, dtk, A, Bm, Cm, chunk=chunk)
     return y.transpose(0, 2, 1, 3), h                 # (B,S,H,P)
 
 
@@ -120,11 +148,12 @@ def _ssm_ref(x, dt, A, Bm, Cm):
     return y.transpose(0, 2, 1, 3), h
 
 
-def _ssm_fwd(x, dt, A, Bm, Cm, chunk, interpret):
-    return _ssm_fwd_impl(x, dt, A, Bm, Cm, chunk, interpret), (x, dt, A, Bm, Cm)
+def _ssm_fwd(x, dt, A, Bm, Cm, chunk, interpret, backend):
+    return (_ssm_fwd_impl(x, dt, A, Bm, Cm, chunk, interpret, backend),
+            (x, dt, A, Bm, Cm))
 
 
-def _ssm_bwd(chunk, interpret, res, g):
+def _ssm_bwd(chunk, interpret, backend, res, g):
     x, dt, A, Bm, Cm = res
     _, vjp = jax.vjp(lambda *a: _ssm_ref(*a), x, dt, A, Bm, Cm)
     return vjp(g)
@@ -138,28 +167,39 @@ ssm_scan.defvjp(_ssm_fwd, _ssm_bwd)
 # ---------------------------------------------------------------------------
 
 def slstm_scan(wx, R, b, state, n_heads: int, chunk: int = 16,
-               interpret: bool = False):
+               interpret: bool = False, backend: Optional[str] = None):
     """wx: (B, S, 4d); R: (4, H, Pd, Pd); b: (4d,); state: 4x(B, d) f32.
     Forward-only (serving / frozen-actor path); training uses the XLA
     scan with unroll (ExecConfig.slstm_unroll)."""
-    return slstm_scan_kernel(wx, R, b, state, n_heads=n_heads, chunk=chunk,
-                             interpret=interpret)
+    bk = _choose("slstm_scan", interpret, backend)
+    if bk == kb.REF:
+        return ref.slstm_scan(wx, R, b, state, n_heads)
+    return kb.lookup("slstm_scan", bk)(wx, R, b, state, n_heads=n_heads,
+                                       chunk=chunk)
 
 
 # ---------------------------------------------------------------------------
 # rmsnorm
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def rmsnorm(x, gamma, eps: float = 1e-5, interpret: bool = False):
-    return rmsnorm_kernel(x, gamma, eps=eps, interpret=interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def rmsnorm(x, gamma, eps: float = 1e-5, interpret: bool = False,
+            backend: Optional[str] = None):
+    return _rms_fwd_impl(x, gamma, eps, interpret, backend)
 
 
-def _rms_fwd(x, gamma, eps, interpret):
-    return rmsnorm_kernel(x, gamma, eps=eps, interpret=interpret), (x, gamma)
+def _rms_fwd_impl(x, gamma, eps, interpret, backend):
+    b = _choose("rmsnorm", interpret, backend)
+    if b == kb.REF:
+        return ref.rmsnorm(x, gamma, eps)
+    return kb.lookup("rmsnorm", b)(x, gamma, eps=eps)
 
 
-def _rms_bwd(eps, interpret, res, g):
+def _rms_fwd(x, gamma, eps, interpret, backend):
+    return _rms_fwd_impl(x, gamma, eps, interpret, backend), (x, gamma)
+
+
+def _rms_bwd(eps, interpret, backend, res, g):
     x, gamma = res
     _, vjp = jax.vjp(lambda x, gamma: ref.rmsnorm(x, gamma, eps), x, gamma)
     return vjp(g)

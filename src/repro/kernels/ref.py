@@ -9,6 +9,7 @@ Layouts (kernel-native):
   decode_attention: q (B, H, D), k/v (B, Hkv, L, D)     -> (B, H, D)
   ssm_scan: x (B, H, S, P), dt (B, H, S), A (H,), Bm/Cm (B, S, N)
   rmsnorm: x (..., D), gamma (D,)
+  slstm_scan: wx (B, S, 4d), R (4, H, Pd, Pd), b (4d,), state 4x(B, d)
 """
 
 from __future__ import annotations
@@ -82,3 +83,32 @@ def rmsnorm(x, gamma, eps: float = 1e-5):
     x = x.astype(jnp.float32)
     x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
     return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def slstm_scan(wx, R, b, state, n_heads: int):
+    """Sequential sLSTM recurrence with exp-gate stabilization.
+    wx: (B, S, 4d); R: (4, H, Pd, Pd); b: (4d,); state: (c, n, h, m) each
+    (B, d) f32. Returns hs (B, S, d), final state."""
+    B, S, d4 = wx.shape
+    d = d4 // 4
+    H = n_heads
+    Pd = d // H
+    R32, b32 = R.astype(jnp.float32), b.astype(jnp.float32)
+
+    def step(st, wx_t):
+        c, n, h, m = st
+        rec = jnp.einsum("bhp,ghpq->bghq", h.reshape(B, H, Pd),
+                         R32).reshape(B, 4 * d)
+        pre = wx_t.astype(jnp.float32) + rec + b32[None]
+        z_t, i_t, f_t, o_t = jnp.split(pre, 4, axis=-1)
+        f_log = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(f_log + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(f_log + m - m_new)
+        c = f_p * c + i_p * jnp.tanh(z_t)
+        n = f_p * n + i_p
+        h = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    state, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1))
+    return hs.swapaxes(0, 1).astype(wx.dtype), state

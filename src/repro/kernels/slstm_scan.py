@@ -25,6 +25,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import backend as kb
+from repro.kernels import compat
+
 
 def _slstm_kernel(wx_ref, r_ref, b_ref, c0_ref, n0_ref, h0_ref, m0_ref,
                   hs_ref, cF_ref, nF_ref, hF_ref, mF_ref,
@@ -75,6 +78,7 @@ def _slstm_kernel(wx_ref, r_ref, b_ref, c0_ref, n0_ref, h0_ref, m0_ref,
         mF_ref[...] = m_scr[...]
 
 
+@kb.register("slstm_scan", kb.MOSAIC)
 def slstm_scan_kernel(wx: jax.Array, R: jax.Array, b: jax.Array,
                       state, *, n_heads: int, chunk: int = 16,
                       interpret: bool = False):
@@ -117,8 +121,14 @@ def slstm_scan_kernel(wx: jax.Array, R: jax.Array, b: jax.Array,
             sstate, sstate, sstate, sstate,
         ],
         scratch_shapes=[pltpu.VMEM((B, d), jnp.float32)] * 4,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
+            kb.MOSAIC, interpret=interpret,
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(wx, R, b, c0, n0, h0, m0)
     return hs, (cF, nF, hF, mF)
+
+# No Triton registration: the sLSTM recurrence is strictly sequential per
+# timestep with a batch-wide matmul — there is no block parallelism for a
+# GPU program to exploit, so dispatch falls back to the XLA reference
+# (ref.slstm_scan), which XLA fuses well on GPU.

@@ -1,13 +1,19 @@
-"""Chunked Mamba2 SSD scan — Pallas TPU kernel.
+"""Chunked Mamba2 SSD scan — Pallas kernels (TPU Mosaic + GPU Triton).
 
-Grid: (B, H, n_chunks); chunks are innermost and sequential, carrying the
-(P, N) SSM state in VMEM scratch across chunk steps — the inter-chunk
-recurrence. Within a chunk the kernel computes the quadratic intra-chunk
-term (an (L, L) decay-weighted attention-like matmul on the MXU) plus the
-contribution of the carried state, then updates the state.
+TPU schedule — grid (B, H, n_chunks); chunks are innermost and
+sequential, carrying the (P, N) SSM state in VMEM scratch across chunk
+steps — the inter-chunk recurrence. Within a chunk the kernel computes
+the quadratic intra-chunk term (an (L, L) decay-weighted attention-like
+matmul on the MXU) plus the contribution of the carried state, then
+updates the state.
 
 VMEM per step (L = 128, P = 64, N = 64, f32): x (32 KiB) + B/C (2x32 KiB)
 + (L, L) decay/score mats (2 x 64 KiB) + state scratch (16 KiB) ≈ 0.3 MiB.
+
+GPU schedule — grid (B, H), one program per sequence: Triton grids have
+no sequential axis, so the chunk loop runs on-chip in a ``fori_loop``
+carrying the (P, N) state in registers; chunk slices of x/dt/B/C are cut
+with ``pl.ds`` and each chunk's y is stored as the loop advances.
 """
 
 from __future__ import annotations
@@ -18,6 +24,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import backend as kb
+from repro.kernels import compat
 
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_out_ref, h_scr,
@@ -64,6 +73,7 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_out_ref, h_scr,
         h_out_ref[0, 0] = h_scr[...]
 
 
+@kb.register("ssm_scan", kb.MOSAIC)
 def ssm_scan_kernel(x: jax.Array, dt: jax.Array, A: jax.Array,
                     Bm: jax.Array, Cm: jax.Array, *, chunk: int = 128,
                     interpret: bool = False):
@@ -97,8 +107,89 @@ def ssm_scan_kernel(x: jax.Array, dt: jax.Array, A: jax.Array,
             jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
+            kb.MOSAIC, interpret=interpret,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt3, A.astype(jnp.float32), Bm, Cm)
+    return y, h
+
+
+# ---------------------------------------------------------------------------
+# GPU-Triton variant
+# ---------------------------------------------------------------------------
+
+def _ssd_kernel_gpu(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_out_ref, *,
+                    L: int, P: int, N: int, n_chunks: int):
+    A = a_ref[0]
+
+    def chunk_step(ci, h):
+        sl = pl.ds(ci * L, L)
+        x = x_ref[0, 0, sl, :].astype(jnp.float32)       # (L, P)
+        dt = dt_ref[0, 0, sl].astype(jnp.float32)        # (L,)
+        Bm = b_ref[0, sl, :].astype(jnp.float32)         # (L, N)
+        Cm = c_ref[0, sl, :].astype(jnp.float32)         # (L, N)
+
+        a = dt * A
+        cum = jnp.cumsum(a)
+        ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+        jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+        D = jnp.where(jj <= ii, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+        G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        W = G * D * dt[None, :]
+        y = jax.lax.dot_general(W, x, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        ycross = jax.lax.dot_general(Cm, h, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        y = y + ycross * jnp.exp(cum)[:, None]
+        total = cum[L - 1]
+        sdec = jnp.exp(total - cum) * dt
+        h_in = jax.lax.dot_general(x * sdec[:, None], Bm,
+                                   (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        y_ref[0, 0, sl, :] = y.astype(y_ref.dtype)
+        return h * jnp.exp(total) + h_in
+
+    h = jax.lax.fori_loop(0, n_chunks, chunk_step,
+                          jnp.zeros((P, N), jnp.float32))
+    h_out_ref[0, 0] = h
+
+
+@kb.register("ssm_scan", kb.TRITON)
+def ssm_scan_kernel_gpu(x: jax.Array, dt: jax.Array, A: jax.Array,
+                        Bm: jax.Array, Cm: jax.Array, *, chunk: int = 128,
+                        interpret: bool = False):
+    """Same contract as :func:`ssm_scan_kernel`, Triton schedule."""
+    B, H, S, P = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    n_chunks = S // L
+
+    kernel = functools.partial(_ssd_kernel_gpu, L=L, P=P, N=N,
+                               n_chunks=n_chunks)
+
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, S, P), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, S), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1,), lambda b, h: (h,)),
+            pl.BlockSpec((1, S, N), lambda b, h: (b, 0, 0)),
+            pl.BlockSpec((1, S, N), lambda b, h: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, S, P), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        compiler_params=compat.compiler_params(
+            kb.TRITON, interpret=interpret, num_warps=4, num_stages=1),
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), Bm, Cm)
     return y, h

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.config import INPUT_SHAPES, TrainConfig
 from repro.configs import ARCH_IDS, get_config
 from repro.models.layers import ExecConfig
@@ -61,7 +62,7 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
         "n_chips": 512 if multi_pod else 256,
     }
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         pshard = param_shardings(cfg, mesh, ec)
         t0 = time.time()
         if shape.kind == "train":
@@ -114,7 +115,7 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
     hlo = analyze_text(compiled.as_text())
     rec["flops_per_device"] = hlo["flops"]
     rec["bytes_per_device"] = hlo["bytes"]
-    ca = compiled.cost_analysis() or {}
+    ca = compat.cost_analysis(compiled)
     rec["builtin_flops_unrolled_once"] = float(ca.get("flops", 0.0))
     ma = compiled.memory_analysis()
     if ma is not None:
@@ -171,6 +172,9 @@ def main():
     ap.add_argument("--slstm-unroll", type=int, default=1)
     ap.add_argument("--mlstm-recurrent", action="store_true")
     ap.add_argument("--decode-repeat-kv", action="store_true")
+    ap.add_argument("--kernel-backend", default="auto",
+                    choices=["auto", "pallas", "interpret", "ref",
+                             "mosaic", "triton"])
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
 
@@ -182,7 +186,8 @@ def main():
                     moe_impl=args.moe_impl, kv_seq_shard=args.kv_seq_shard,
                     slstm_unroll=args.slstm_unroll,
                     mlstm_chunked=not args.mlstm_recurrent,
-                    decode_grouped=not args.decode_repeat_kv)
+                    decode_grouped=not args.decode_repeat_kv,
+                    kernel_backend=args.kernel_backend)
     tc = TrainConfig(remat=not args.no_remat)
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

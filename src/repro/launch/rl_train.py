@@ -18,7 +18,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.config import DQNConfig
+from repro.config import DQNConfig, ExecConfig
 from repro.configs.dqn_nature import NatureCNNConfig
 from repro.envs import get_env
 from repro.models.nature_cnn import q_forward, q_init
@@ -38,6 +38,10 @@ def main(argv=None):
     ap.add_argument("--paper-optimizer", action="store_true")
     ap.add_argument("--eval-every", type=int, default=20)
     ap.add_argument("--prepopulate", type=int, default=2048)
+    ap.add_argument("--compute-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="Q-network compute dtype (paper default f32; "
+                         "bf16 halves actor-inference bandwidth)")
     args = ap.parse_args(argv)
 
     spec = get_env(args.env)
@@ -57,7 +61,8 @@ def main(argv=None):
 
     key = jax.random.PRNGKey(0)
     params = q_init(ncfg, spec.n_actions, key)
-    qf = lambda p, o: q_forward(p, o, ncfg)
+    ec = ExecConfig(compute_dtype=args.compute_dtype)
+    qf = lambda p, o: q_forward(p, o, ncfg, ec)
     opt = (centered_rmsprop(2.5e-4) if args.paper_optimizer
            else adamw(1e-3, weight_decay=0.0))
 

@@ -17,6 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.config import TrainConfig
 from repro.configs import get_config, reduced_config
 from repro.data import SyntheticLM
@@ -39,14 +40,18 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--remat", action="store_true")
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--kernel-backend", default="auto",
+                    choices=["auto", "pallas", "interpret", "ref",
+                             "mosaic", "triton"],
+                    help="kernel-backend request (REPRO_KERNEL_BACKEND "
+                         "env var overrides)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     ec = ExecConfig(remat=args.remat, use_pallas=args.use_pallas,
-                    interpret=args.use_pallas and
-                    jax.default_backend() == "cpu",
+                    kernel_backend=args.kernel_backend,
                     compute_dtype="float32" if args.reduced else "bfloat16")
     tc = TrainConfig(learning_rate=args.lr, warmup_steps=10, remat=args.remat)
 
@@ -54,7 +59,7 @@ def main(argv=None):
     data = SyntheticLM(cfg.vocab, args.seq, args.batch)
     step_fn, opt = make_train_step(cfg, ec, tc)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = T.init_params(cfg, jax.random.PRNGKey(0), ec)
         opt_state = opt.init(params)
         pshard = param_shardings(cfg, mesh, ec)

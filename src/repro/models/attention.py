@@ -82,7 +82,7 @@ def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     if ec.use_pallas:
         from repro.kernels import ops
         return ops.flash_attention(q, k, v, causal=True, window=window,
-                                   interpret=ec.interpret)
+                                   backend=ec.kernel_request())
     k = repeat_kv(k, H, 2)
     v = repeat_kv(v, H, 2)
     if S <= max(ec.block_q, 1024) or S % ec.block_q != 0:
@@ -118,7 +118,7 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     if ec.use_pallas:
         from repro.kernels import ops
         return ops.decode_attention(q, k_cache, v_cache, cache_len,
-                                    interpret=ec.interpret)
+                                    backend=ec.kernel_request())
     if not getattr(ec, "decode_grouped", True):
         # paper-era baseline path: materialize the KV repeat to q heads
         kc = repeat_kv(k_cache, H, 1)                  # (B, H, L, D)

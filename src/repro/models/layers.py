@@ -1,55 +1,31 @@
-"""Shared pure-JAX layer math: norms, RoPE, MLPs, losses, exec config."""
+"""Shared pure-JAX layer math: norms, RoPE, MLPs, losses.
+
+``ExecConfig`` moved to ``repro.config`` (it configures the whole stack,
+not just layers); the re-export below keeps the historical import path
+``from repro.models.layers import ExecConfig`` working.
+"""
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-
-@dataclasses.dataclass(frozen=True)
-class ExecConfig:
-    """Execution-strategy knobs, orthogonal to the architecture."""
-
-    use_pallas: bool = False      # Pallas kernels for attention / SSM scan
-    interpret: bool = False       # Pallas interpret mode (CPU validation)
-    compute_dtype: str = "bfloat16"
-    remat: bool = False           # activation-checkpoint the superblock scan
-    block_q: int = 512            # q-block for the blocked-XLA attention
-    vocab_pad: int = 256          # pad vocab to a multiple (shardability)
-    # MoE dispatch: "scatter" (capacity buffers, baseline), "expert_parallel"
-    # (shard_map over the model axis, §Perf optimized) or "dense" (oracle)
-    moe_impl: str = "scatter"
-    fsdp: bool = False            # shard params/opt-state over the data axis
-    # shard decode KV caches over the model axis along the sequence dim
-    # (flash-decoding style partition; §Perf decode optimization)
-    kv_seq_shard: bool = False
-    # sLSTM scan unrolling: amortizes the recurrent-weight HBM reads over
-    # k timesteps per loop iteration (§Perf xlstm iteration 2)
-    slstm_unroll: int = 1
-    # mLSTM formulation: chunkwise-parallel (optimized) vs per-token
-    # recurrence (the paper-faithful baseline; §Perf xlstm iteration 1)
-    mlstm_chunked: bool = True
-    # decode attention: grouped GQA einsum (optimized) vs materialized
-    # KV-repeat (baseline; §Perf decode iteration)
-    decode_grouped: bool = True
-
-    @property
-    def cdtype(self):
-        return jnp.dtype(self.compute_dtype)
-
-
-DEFAULT_EXEC = ExecConfig()
+from repro.config import DEFAULT_EXEC, ExecConfig  # noqa: F401  (re-export)
 
 
 def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5,
+             ec: Optional[ExecConfig] = None) -> jax.Array:
+    """RMSNorm; dispatches to the fused kernel when ``ec`` asks for Pallas."""
+    if ec is not None and ec.use_pallas:
+        from repro.kernels import ops
+        return ops.rmsnorm(x, gamma, eps, backend=ec.kernel_request())
     dt = x.dtype
     x = x.astype(jnp.float32)
     x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)

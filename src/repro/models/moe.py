@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.config import ModelConfig, MoEConfig
 from repro.models.layers import ExecConfig
 from repro.models import params as PM
@@ -124,7 +125,7 @@ def _expert_parallel_moe(p, x, cfg: ModelConfig, m: MoEConfig):
     (pod?, data) and replicated over `model`; expert stacks sharded over
     `model`. Each rank dispatches to its local experts only and a single
     psum over `model` combines partial outputs."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     axes = mesh.axis_names
     bspec = tuple(a for a in ("pod", "data") if a in axes)
     B, S, d = x.shape
@@ -162,14 +163,13 @@ def _expert_parallel_moe(p, x, cfg: ModelConfig, m: MoEConfig):
             aux = jax.lax.pmean(aux, bspec)
         return y, aux
 
-    y, aux = jax.shard_map(
+    y, aux = compat.shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(bspec, None, None), P(None, None),
                   P("model", None, None), P("model", None, None),
                   P("model", None, None)),
         out_specs=(P(bspec, None, None), P()),
-        check_vma=False,
-    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+        check_vma=False)(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
     return y.reshape(B * S, d), aux
 
 
@@ -182,8 +182,9 @@ def moe_ffn(p, x: jax.Array, cfg: ModelConfig, ec: ExecConfig) -> Tuple[jax.Arra
 
     ep_ok = False
     if ec.moe_impl == "expert_parallel":
-        mesh = jax.sharding.get_abstract_mesh()
-        ep_ok = ("model" in mesh.axis_names
+        mesh = compat.get_abstract_mesh()
+        ep_ok = (not compat.mesh_is_empty(mesh)
+                 and "model" in mesh.axis_names
                  and padded_experts(m) % mesh.shape["model"] == 0)
     if ep_ok:
         y, aux = _expert_parallel_moe(p, x, cfg, m)

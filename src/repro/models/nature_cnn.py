@@ -8,12 +8,13 @@ bus-saturation story)."""
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.config import ExecConfig
 from repro.configs.dqn_nature import NatureCNNConfig
 from repro.models import params as P
 
@@ -40,14 +41,27 @@ def q_init(cfg: NatureCNNConfig, n_actions: int, key: jax.Array):
     return P.init_tree(q_param_spec(cfg, n_actions), key)
 
 
-def q_forward(params, frames: jax.Array, cfg: NatureCNNConfig) -> jax.Array:
-    """frames: (B, H, W, C) uint8 -> Q-values (B, n_actions) float32."""
-    x = frames.astype(jnp.float32) / 255.0
+def q_forward(params, frames: jax.Array, cfg: NatureCNNConfig,
+              ec: Optional[ExecConfig] = None) -> jax.Array:
+    """frames: (B, H, W, C) uint8 -> Q-values (B, n_actions) float32.
+
+    ``ec`` threads the execution config through the DQN path for parity
+    with the LLM stack: it selects the conv/matmul compute dtype.
+    ``ec=None`` (and the rl_train launcher default) is f32 — the paper
+    trains the Q-network in full precision — so passing a bf16
+    ``ExecConfig`` is an explicit opt-in (e.g. frozen-actor inference).
+    The kernel-backend request is accepted but resolves to plain XLA on
+    every backend: lax.conv already maps straight onto the MXU / cuDNN,
+    so the CNN registers no custom kernels.
+    """
+    cdt = jnp.float32 if ec is None else ec.cdtype
+    x = frames.astype(cdt) / jnp.asarray(255.0, cdt)
     for i, (_, k, s) in enumerate(cfg.convs):
         x = jax.lax.conv_general_dilated(
-            x, params[f"conv{i}_w"], window_strides=(s, s), padding="VALID",
-            dimension_numbers=("NHWC", "HWIO", "NHWC"))
-        x = jax.nn.relu(x + params[f"conv{i}_b"])
+            x, params[f"conv{i}_w"].astype(cdt), window_strides=(s, s),
+            padding="VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + params[f"conv{i}_b"].astype(cdt))
     x = x.reshape(x.shape[0], -1)
-    x = jax.nn.relu(x @ params["fc_w"] + params["fc_b"])
-    return x @ params["out_w"] + params["out_b"]
+    x = jax.nn.relu(x @ params["fc_w"].astype(cdt) + params["fc_b"].astype(cdt))
+    q = x @ params["out_w"].astype(cdt) + params["out_b"].astype(cdt)
+    return q.astype(jnp.float32)

@@ -127,13 +127,13 @@ def mamba2_forward(p, x: jax.Array, cfg: ModelConfig, ec: ExecConfig,
     if ec.use_pallas:
         from repro.kernels import ops
         y, h_final = ops.ssm_scan(xh, dt, A, Bm, Cm, chunk=cfg.ssm.chunk,
-                                  interpret=ec.interpret)
+                                  backend=ec.kernel_request())
     else:
         y, h_final = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm.chunk)
     y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]
     y = y.reshape(*y.shape[:2], d_inner)
     y = y * jax.nn.silu(z)
-    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    y = rms_norm(y, p["norm"], cfg.norm_eps, ec)
     return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(y.dtype)), h_final
 
 
@@ -147,7 +147,8 @@ def mamba2_init_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Arra
 
 
 def mamba2_decode_step(p, x: jax.Array, cache: Dict[str, jax.Array],
-                       cfg: ModelConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+                       cfg: ModelConfig, ec: ExecConfig = None
+                       ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token recurrent update. x: (B, 1, d)."""
     d_inner, H, Pd, N = ssm_dims(cfg)
     proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
@@ -169,6 +170,6 @@ def mamba2_decode_step(p, x: jax.Array, cache: Dict[str, jax.Array],
     y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
     y = y.reshape(-1, 1, d_inner).astype(x.dtype)
     y = y * jax.nn.silu(z)
-    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    y = rms_norm(y, p["norm"], cfg.norm_eps, ec)
     out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(y.dtype))
     return out, {"state": h, "conv": new_conv}

@@ -171,7 +171,7 @@ def _self_attention(bp, x, positions, cfg: ModelConfig, ec: ExecConfig,
                     causal: bool = True, window: Optional[int] = None,
                     return_kv: bool = False):
     hd = cfg.resolved_head_dim
-    h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+    h = rms_norm(x, bp["norm1"], cfg.norm_eps, ec)
     q = _heads(jnp.einsum("bsd,de->bse", h, bp["wq"].astype(h.dtype)), cfg.n_heads, hd)
     k = _heads(jnp.einsum("bsd,de->bse", h, bp["wk"].astype(h.dtype)), cfg.n_kv_heads, hd)
     v = _heads(jnp.einsum("bsd,de->bse", h, bp["wv"].astype(h.dtype)), cfg.n_kv_heads, hd)
@@ -191,7 +191,7 @@ def _self_attention(bp, x, positions, cfg: ModelConfig, ec: ExecConfig,
 
 def _cross_attention(bp, x, memory, cfg: ModelConfig, ec: ExecConfig):
     hd = cfg.resolved_head_dim
-    h = rms_norm(x, bp["norm_x"], cfg.norm_eps)
+    h = rms_norm(x, bp["norm_x"], cfg.norm_eps, ec)
     q = _heads(jnp.einsum("bsd,de->bse", h, bp["wq_x"].astype(h.dtype)), cfg.n_heads, hd)
     k = _heads(jnp.einsum("bmd,de->bme", memory, bp["wk_x"].astype(h.dtype)), cfg.n_kv_heads, hd)
     v = _heads(jnp.einsum("bmd,de->bme", memory, bp["wv_x"].astype(h.dtype)), cfg.n_kv_heads, hd)
@@ -236,7 +236,7 @@ def _apply_block(kind: str, bp, x, positions, memory, cfg: ModelConfig,
                             cfg.n_kv_heads, hd)
                 entry["ck"] = mk.transpose(0, 2, 1, 3).astype(dt)
                 entry["cv"] = mv.transpose(0, 2, 1, 3).astype(dt)
-        h, aux = _mlp(bp["mlp"], rms_norm(x, bp["norm2"], cfg.norm_eps), cfg, ec)
+        h, aux = _mlp(bp["mlp"], rms_norm(x, bp["norm2"], cfg.norm_eps, ec), cfg, ec)
         x = x + h
     elif kind == MAMBA2:
         h, state = SSM.mamba2_forward(bp, x, cfg, ec)
@@ -279,11 +279,11 @@ def encode(cfg: ModelConfig, ec: ExecConfig, params: Tree, frames: jax.Array) ->
     def body(x, lp):
         h = _self_attention(lp, x, None, cfg, ec, causal=False)
         x = x + h
-        h, _ = _mlp(lp["mlp"], rms_norm(x, lp["norm2"], cfg.norm_eps), cfg, ec)
+        h, _ = _mlp(lp["mlp"], rms_norm(x, lp["norm2"], cfg.norm_eps, ec), cfg, ec)
         return x + h, None
 
     x, _ = jax.lax.scan(body, x, enc["layers"])
-    return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps, ec)
 
 
 def _unembed(cfg, ec, params, x):
@@ -335,7 +335,7 @@ def forward(cfg: ModelConfig, ec: ExecConfig, params: Tree, tokens: jax.Array,
         body = jax.checkpoint(body)
     (x, aux), entries = jax.lax.scan(body, (x, jnp.float32(0.0)),
                                      params["layers"])
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, ec)
     logits = _unembed(cfg, ec, params, x)
     aux = aux / max(cfg.n_layers, 1)
     if collect_cache_len:
@@ -391,7 +391,7 @@ def _decode_block(kind: str, bp, cache_slice, x, pos, ring: bool,
     hd = cfg.resolved_head_dim
     new_cache = cache_slice
     if kind in (ATTN, CROSS_ATTN):
-        h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+        h = rms_norm(x, bp["norm1"], cfg.norm_eps, ec)
         q = _heads(jnp.einsum("bsd,de->bse", h, bp["wq"].astype(h.dtype)), cfg.n_heads, hd)
         k = _heads(jnp.einsum("bsd,de->bse", h, bp["wk"].astype(h.dtype)), cfg.n_kv_heads, hd)
         v = _heads(jnp.einsum("bsd,de->bse", h, bp["wv"].astype(h.dtype)), cfg.n_kv_heads, hd)
@@ -405,7 +405,7 @@ def _decode_block(kind: str, bp, cache_slice, x, pos, ring: bool,
         x = x + jnp.einsum("bse,ed->bsd", o, bp["wo"].astype(o.dtype))
         new_cache = dict(cache_slice, k=kc, v=vc)
         if kind == CROSS_ATTN:
-            hq = rms_norm(x, bp["norm_x"], cfg.norm_eps)
+            hq = rms_norm(x, bp["norm_x"], cfg.norm_eps, ec)
             qx = _heads(jnp.einsum("bsd,de->bse", hq, bp["wq_x"].astype(hq.dtype)), cfg.n_heads, hd)
             ox = A.decode_attention(qx, cache_slice["ck"], cache_slice["cv"],
                                     jnp.int32(cfg.cross_memory_len), ec)
@@ -414,16 +414,16 @@ def _decode_block(kind: str, bp, cache_slice, x, pos, ring: bool,
             if "gate_x" in bp:
                 ox = ox * jnp.tanh(bp["gate_x"].astype(ox.dtype))
             x = x + ox
-        h, _ = _mlp(bp["mlp"], rms_norm(x, bp["norm2"], cfg.norm_eps), cfg, ec)
+        h, _ = _mlp(bp["mlp"], rms_norm(x, bp["norm2"], cfg.norm_eps, ec), cfg, ec)
         x = x + h
     elif kind == MAMBA2:
-        h, new_cache = SSM.mamba2_decode_step(bp, x, cache_slice, cfg)
+        h, new_cache = SSM.mamba2_decode_step(bp, x, cache_slice, cfg, ec)
         x = x + h
     elif kind == MLSTM:
-        h, new_cache = XL.mlstm_decode_step(bp, x, cache_slice, cfg)
+        h, new_cache = XL.mlstm_decode_step(bp, x, cache_slice, cfg, ec)
         x = x + h
     elif kind == SLSTM:
-        h, st = XL.slstm_decode_step(bp, x, cache_slice["state"], cfg)
+        h, st = XL.slstm_decode_step(bp, x, cache_slice["state"], cfg, ec)
         x = x + h
         new_cache = {"state": st}
     else:
@@ -452,7 +452,7 @@ def decode_step(cfg: ModelConfig, ec: ExecConfig, params: Tree, cache: Tree,
         return x, new_cs
 
     x, new_layer_cache = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, ec)
     logits = _unembed(cfg, ec, params, x)
     return logits, {"layers": new_layer_cache, "pos": pos + 1, "ring": cache["ring"]}
 

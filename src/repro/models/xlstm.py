@@ -176,7 +176,7 @@ def mlstm_forward(p, x, cfg: ModelConfig, ec: ExecConfig, state=None,
         state, hs = jax.lax.scan(body, state,
                                  (sw(q), sw(k), sw(v), sw(i_t), sw(f_t)))
         h = hs.swapaxes(0, 1).reshape(B, S, d_inner).astype(x.dtype)
-    h = rms_norm(h, p["norm"], cfg.norm_eps)
+    h = rms_norm(h, p["norm"], cfg.norm_eps, ec)
     h = h * jax.nn.silu(z)
     return jnp.einsum("bse,ed->bsd", h, p["down_proj"].astype(x.dtype)), state
 
@@ -196,7 +196,7 @@ def mlstm_init_cache(cfg: ModelConfig, batch: int, dtype):
     }
 
 
-def mlstm_decode_step(p, x, cache, cfg: ModelConfig):
+def mlstm_decode_step(p, x, cache, cfg: ModelConfig, ec: ExecConfig = None):
     """x: (B, 1, d)."""
     d_inner, H, Pd = mlstm_dims(cfg)
     up = jnp.einsum("bsd,de->bse", x, p["up_proj"].astype(x.dtype))
@@ -212,7 +212,7 @@ def mlstm_decode_step(p, x, cache, cfg: ModelConfig):
     i_t, f_t = jnp.split(gates, 2, axis=-1)
     state, h = _mlstm_step(cache["state"], q, k, v, i_t, f_t)
     h = h.reshape(-1, 1, d_inner).astype(x.dtype)
-    h = rms_norm(h, p["norm"], cfg.norm_eps)
+    h = rms_norm(h, p["norm"], cfg.norm_eps, ec)
     h = h * jax.nn.silu(z)
     y = jnp.einsum("bse,ed->bsd", h, p["down_proj"].astype(x.dtype))
     return y, {"state": state, "conv": window[:, 1:]}
@@ -274,7 +274,7 @@ def slstm_forward(p, x, cfg: ModelConfig, ec: ExecConfig, state=None):
         from repro.kernels import ops
         hs_k, state = ops.slstm_scan(wx, p["r"], p["b"], state,
                                      n_heads=cfg.n_heads, chunk=16,
-                                     interpret=ec.interpret)
+                                     backend=ec.kernel_request())
         hs = hs_k.swapaxes(0, 1)
     else:
         def body(st, wxt):
@@ -285,7 +285,7 @@ def slstm_forward(p, x, cfg: ModelConfig, ec: ExecConfig, state=None):
         state, hs = jax.lax.scan(body, state, wx.swapaxes(0, 1),
                                  unroll=unroll if S % unroll == 0 else 1)
     h = hs.swapaxes(0, 1).astype(x.dtype)               # (B,S,d)
-    h = rms_norm(h, p["norm"], cfg.norm_eps)
+    h = rms_norm(h, p["norm"], cfg.norm_eps, ec)
     up = jnp.einsum("bsd,df->bsf", h, p["ffn_up"].astype(x.dtype))
     g, u = jnp.split(up, 2, axis=-1)
     y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g) * u, p["ffn_down"].astype(x.dtype))
@@ -298,12 +298,12 @@ def slstm_init_state(cfg: ModelConfig, batch: int):
     return (z(), z(), z(), jnp.full((batch, d), -1e9, jnp.float32))
 
 
-def slstm_decode_step(p, x, state, cfg: ModelConfig):
+def slstm_decode_step(p, x, state, cfg: ModelConfig, ec: ExecConfig = None):
     """x: (B, 1, d)."""
     wx = jnp.einsum("bsd,dg->bsg", x, p["w_in"].astype(x.dtype))[:, 0]
     state = _slstm_step(p, state, wx, cfg)
     h = state[2][:, None].astype(x.dtype)
-    h = rms_norm(h, p["norm"], cfg.norm_eps)
+    h = rms_norm(h, p["norm"], cfg.norm_eps, ec)
     up = jnp.einsum("bsd,df->bsf", h, p["ffn_up"].astype(x.dtype))
     g, u = jnp.split(up, 2, axis=-1)
     y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g) * u, p["ffn_down"].astype(x.dtype))

@@ -182,8 +182,15 @@ def parse_module(text: str) -> Dict[str, List[Op]]:
     return comps
 
 
+_OPERAND_NAME_RE = re.compile(r"%[\w.\-]+")
+
+
 def _operands(rest: str) -> List[str]:
-    """First-level operand names of `op(...)...` ."""
+    """First-level operand names of `op(...)...` .
+
+    Depending on the XLA version, operands print bare (``%name``) or with
+    an inline type (``f32[128,256]{1,0} %name``); either way the operand
+    name is the %-token of its fragment."""
     out, depth, token = [], 0, []
     for ch in rest:
         if ch == "(":
@@ -201,7 +208,12 @@ def _operands(rest: str) -> List[str]:
             token.append(ch)
     if token:
         out.append("".join(token).strip())
-    return [t for t in out if t.startswith("%")]
+    names = []
+    for t in out:
+        m = _OPERAND_NAME_RE.search(t)
+        if m:
+            names.append(m.group(0))
+    return names
 
 
 class HloCostModel:

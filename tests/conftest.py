@@ -8,3 +8,12 @@ def _cpu_config():
     # only launch/dryrun.py sets xla_force_host_platform_device_count.
     assert jax.default_backend() == "cpu"
     yield
+
+
+@pytest.fixture(autouse=True)
+def _hermetic_kernel_backend(monkeypatch):
+    # The operator env override beats every in-code backend request (by
+    # design), which would turn the explicit-backend kernel tests into
+    # ref-vs-ref no-ops whenever CI or a dev shell exports it. Strip it;
+    # tests that cover the override set it themselves via monkeypatch.
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND", raising=False)

@@ -1,0 +1,249 @@
+"""Kernel-backend dispatch: resolution rules + cross-backend numerics.
+
+Two layers of coverage:
+  * resolution — given a platform, a request, and the env-var override,
+    ``kernels/backend.py`` must pick the documented concrete backend
+    (mosaic/triton/interpret/ref) with per-op fallback to ref;
+  * numerics — every backend exercisable on this host must agree with
+    the pure-XLA oracle in ``kernels/ref.py`` for all five ops. On a
+    CPU-only host that is {ref, interpret}; the GPU-Triton schedules are
+    additionally exercised through the Pallas interpreter so their
+    (different) loop structure is validated everywhere.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import backend as kb
+from repro.kernels import ops, ref
+
+TOL = dict(atol=5e-4, rtol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# resolution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("plat,request_,expect", [
+    ("tpu", "auto", kb.MOSAIC),
+    ("gpu", "auto", kb.TRITON),
+    ("cpu", "auto", kb.REF),
+    ("tpu", "pallas", kb.MOSAIC),
+    ("gpu", "pallas", kb.TRITON),
+    ("cpu", "pallas", kb.INTERPRET),
+    ("cpu", "interpret", kb.INTERPRET),
+    ("tpu", "ref", kb.REF),
+    ("cpu", None, kb.REF),
+])
+def test_resolve_matrix(plat, request_, expect, monkeypatch):
+    monkeypatch.delenv(kb.ENV_VAR, raising=False)
+    assert kb.resolve(request_, plat=plat) == expect
+
+
+def test_env_var_overrides_request(monkeypatch):
+    monkeypatch.setenv(kb.ENV_VAR, "ref")
+    assert kb.resolve("pallas", plat="tpu") == kb.REF
+    assert kb.choose("flash_attention", "interpret", plat="gpu") == kb.REF
+    monkeypatch.setenv(kb.ENV_VAR, "interpret")
+    assert kb.resolve(None, plat="cpu") == kb.INTERPRET
+
+
+def test_env_var_rejects_unknown(monkeypatch):
+    monkeypatch.setenv(kb.ENV_VAR, "cuda-graphs")
+    with pytest.raises(ValueError):
+        kb.resolve(None)
+
+
+def test_per_op_fallback_to_ref(monkeypatch):
+    monkeypatch.delenv(kb.ENV_VAR, raising=False)
+    # every op has a mosaic kernel
+    for op in kb.OPS:
+        assert kb.choose(op, "pallas", plat="tpu") == kb.MOSAIC
+    # sequential slstm has no triton kernel -> XLA ref on GPU
+    assert kb.choose("slstm_scan", "pallas", plat="gpu") == kb.REF
+    assert kb.choose("flash_attention", "pallas", plat="gpu") == kb.TRITON
+    assert kb.choose("ssm_scan", "auto", plat="gpu") == kb.TRITON
+
+
+def test_registry_is_fully_populated():
+    for op in kb.OPS:
+        assert kb.MOSAIC in kb.registered(op), op
+        assert kb.REF in kb.registered(op), op
+
+
+def test_exec_config_threading(monkeypatch):
+    from repro.config import ExecConfig
+    monkeypatch.delenv(kb.ENV_VAR, raising=False)
+    assert ExecConfig().kernel_request() == "pallas"
+    assert ExecConfig(interpret=True).kernel_request() == "interpret"
+    assert ExecConfig(kernel_backend="ref").kernel_request() == "ref"
+    # interpret flag loses to an explicit backend choice
+    assert ExecConfig(interpret=True,
+                      kernel_backend="ref").kernel_request() == "ref"
+
+
+# ---------------------------------------------------------------------------
+# numerics: dispatched op vs ref, every backend available on this host
+# ---------------------------------------------------------------------------
+
+def _host_backends(op):
+    """Backends the dispatched op can run here, always including ref."""
+    return kb.testable_backends(op)
+
+
+def _assert_close(a, b, **tol):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), **(tol or TOL))
+
+
+@pytest.mark.parametrize("backend", [kb.REF, kb.INTERPRET, kb.MOSAIC,
+                                     kb.TRITON])
+def test_flash_attention_backends(backend):
+    if backend not in _host_backends("flash_attention"):
+        pytest.skip(f"{backend} not runnable on {kb.platform()}")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 256, 4, 64))
+    k = jax.random.normal(ks[1], (2, 256, 2, 64))
+    v = jax.random.normal(ks[2], (2, 256, 2, 64))
+    out = ops.flash_attention(q, k, v, True, 64, False, 128, backend)
+    expect = ref.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=True, window=64).transpose(0, 2, 1, 3)
+    _assert_close(out, expect, **TOL)
+
+
+@pytest.mark.parametrize("backend", [kb.REF, kb.INTERPRET, kb.MOSAIC,
+                                     kb.TRITON])
+def test_decode_attention_backends(backend):
+    if backend not in _host_backends("decode_attention"):
+        pytest.skip(f"{backend} not runnable on {kb.platform()}")
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, H, Hkv, L, D = 2, 4, 2, 256, 64
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    kc = jax.random.normal(ks[1], (B, Hkv, L, D))
+    vc = jax.random.normal(ks[2], (B, Hkv, L, D))
+    cl = jnp.int32(77)
+    out = ops.decode_attention(q, kc, vc, cl, backend=backend)
+    expect = ref.decode_attention(q.reshape(B, H, D), kc, vc, cl)[:, None]
+    _assert_close(out, expect, **TOL)
+
+
+@pytest.mark.parametrize("backend", [kb.REF, kb.INTERPRET, kb.MOSAIC,
+                                     kb.TRITON])
+def test_ssm_scan_backends(backend):
+    if backend not in _host_backends("ssm_scan"):
+        pytest.skip(f"{backend} not runnable on {kb.platform()}")
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    B, S, H, P, N = 2, 128, 2, 8, 8
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y, h = ops.ssm_scan(x, dt, A, Bm, Cm, 64, False, backend)
+    y_ref, h_ref = ref.ssm_scan(x.transpose(0, 2, 1, 3),
+                                dt.transpose(0, 2, 1), A, Bm, Cm)
+    _assert_close(y, y_ref.transpose(0, 2, 1, 3), atol=1e-3, rtol=1e-3)
+    _assert_close(h, h_ref, atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("backend", [kb.REF, kb.INTERPRET, kb.MOSAIC,
+                                     kb.TRITON])
+def test_rmsnorm_backends(backend):
+    if backend not in _host_backends("rmsnorm"):
+        pytest.skip(f"{backend} not runnable on {kb.platform()}")
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 64, 256))
+    g = jax.random.normal(jax.random.PRNGKey(4), (256,))
+    out = ops.rmsnorm(x, g, 1e-5, False, backend)
+    _assert_close(out, ref.rmsnorm(x, g), **TOL)
+
+
+@pytest.mark.parametrize("backend", [kb.REF, kb.INTERPRET, kb.MOSAIC,
+                                     kb.TRITON])
+def test_slstm_scan_backends(backend):
+    if backend not in _host_backends("slstm_scan"):
+        pytest.skip(f"{backend} not runnable on {kb.platform()}")
+    import dataclasses
+    from repro.configs import reduced_config
+    from repro.models import params as PM
+    from repro.models import xlstm as XL
+    cfg = dataclasses.replace(reduced_config("xlstm-125m"),
+                              d_model=32, n_heads=4, n_kv_heads=4)
+    p = PM.init_tree(XL.slstm_param_spec(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32))
+    wx = jnp.einsum("bsd,dg->bsg", x, p["w_in"])
+    st = XL.slstm_init_state(cfg, 2)
+    hs, stf = ops.slstm_scan(wx, p["r"], p["b"], st, n_heads=4, chunk=16,
+                             backend=backend)
+    hs_ref, st_ref = ref.slstm_scan(wx, p["r"], p["b"], st, 4)
+    _assert_close(hs, hs_ref, atol=1e-5, rtol=1e-5)
+    for a, b in zip(stf, st_ref):
+        _assert_close(a, b, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the GPU-Triton schedules, validated through the interpreter everywhere
+# ---------------------------------------------------------------------------
+
+def test_triton_flash_schedule_interpreted():
+    from repro.kernels.flash_attention import flash_attention_kernel_gpu
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (1, 4, 256, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    for window in (None, 64):
+        out = flash_attention_kernel_gpu(q, k, v, causal=True, window=window,
+                                         bq=128, bk=64, interpret=True)
+        _assert_close(out, ref.flash_attention(q, k, v, causal=True,
+                                               window=window), **TOL)
+
+
+def test_triton_decode_schedule_interpreted():
+    from repro.kernels.decode_attention import decode_attention_kernel_gpu
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (2, 4, 64))
+    kc = jax.random.normal(ks[1], (2, 2, 256, 64))
+    vc = jax.random.normal(ks[2], (2, 2, 256, 64))
+    for cl in (1, 100, 256):
+        out = decode_attention_kernel_gpu(q, kc, vc, jnp.int32(cl), bl=64,
+                                          interpret=True)
+        _assert_close(out, ref.decode_attention(q, kc, vc, jnp.int32(cl)),
+                      **TOL)
+
+
+def test_triton_ssm_schedule_interpreted():
+    from repro.kernels.ssm_scan import ssm_scan_kernel_gpu
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    B, S, H, P, N = 2, 128, 2, 8, 8
+    x = jax.random.normal(ks[0], (B, H, S, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, H, S)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y, h = ssm_scan_kernel_gpu(x, dt, A, Bm, Cm, chunk=32, interpret=True)
+    y_ref, h_ref = ref.ssm_scan(x, dt, A, Bm, Cm)
+    _assert_close(y, y_ref, atol=1e-3, rtol=1e-3)
+    _assert_close(h, h_ref, atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# gradients flow through dispatch (custom-vjp recompute via ref)
+# ---------------------------------------------------------------------------
+
+def test_grad_through_dispatched_flash():
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64))
+    k = jax.random.normal(ks[1], (1, 128, 2, 64))
+    v = jax.random.normal(ks[2], (1, 128, 2, 64))
+
+    def loss(q, k, v, backend):
+        return jnp.sum(ops.flash_attention(q, k, v, True, None, False, 128,
+                                           backend) ** 2)
+
+    backends = _host_backends("flash_attention")
+    grads = [jax.grad(loss, argnums=(0, 1, 2))(q, k, v, b) for b in backends]
+    for g in grads[1:]:
+        for a, b in zip(grads[0], g):
+            _assert_close(a, b, atol=1e-3, rtol=1e-3)

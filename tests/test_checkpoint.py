@@ -2,6 +2,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 
 
@@ -23,8 +24,7 @@ def test_restore_onto_shardings(tmp_path):
     tree = {"w": jnp.arange(8.0)}
     d = str(tmp_path / "ckpt")
     save_checkpoint(d, 1, tree)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     sh = {"w": jax.sharding.NamedSharding(
         mesh, jax.sharding.PartitionSpec("data"))}
     got = restore_checkpoint(d, 1, tree, shardings=sh)

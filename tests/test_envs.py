@@ -4,6 +4,11 @@ termination, render contents, autoreset semantics, preprocessing."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install "
+    "hypothesis); deterministic coverage still runs elsewhere")
 from hypothesis import given, settings, strategies as st
 
 from repro.envs import ENVS, get_env

@@ -14,6 +14,13 @@ from repro.models import attention as A
 from repro.models.layers import ExecConfig
 
 
+def _with_host_devices(flags: str, n: int = 8) -> str:
+    """Append the host-device-count flag, preserving caller XLA_FLAGS."""
+    if "xla_force_host_platform_device_count" in flags:
+        return flags
+    return (flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+
 def test_grouped_decode_matches_repeat_kv():
     key = jax.random.PRNGKey(0)
     B, H, Hkv, L, D = 2, 8, 2, 64, 16
@@ -37,21 +44,25 @@ def test_expert_parallel_multidevice_subprocess(tmp_path):
     prog = tmp_path / "prog.py"
     prog.write_text("""
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import dataclasses
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from repro.configs import reduced_config
 from repro.models import moe as M
 from repro.models import params as PM
 from repro.models.layers import ExecConfig
 
+if jax.device_count() < 8:
+    print("SKIP: only", jax.device_count(), "devices visible")
+    raise SystemExit(0)
+
 cfg = reduced_config("qwen2-moe-a2.7b")
 cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
 p = PM.init_tree(M.moe_param_spec(cfg), jax.random.PRNGKey(0))
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
-with jax.set_mesh(mesh):
+mesh = compat.make_mesh((4, 2), ("data", "model"))
+with compat.set_mesh(mesh):
     y_ep, _ = jax.jit(lambda p, x: M.moe_ffn(p, x, cfg, ExecConfig(moe_impl="expert_parallel")))(p, x)
 y_dn, _ = M.moe_ffn(p, x, cfg, ExecConfig(moe_impl="dense"))
 err = float(jnp.abs(y_ep - y_dn).max())
@@ -60,15 +71,18 @@ assert err < 1e-4, err
 def loss(p):
     y, aux = M.moe_ffn(p, x, cfg, ExecConfig(moe_impl="expert_parallel"))
     return jnp.sum(y ** 2) + aux
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     g = jax.jit(jax.grad(loss))(p)
 assert all(bool(jnp.isfinite(v).all()) for v in jax.tree_util.tree_leaves(g))
 print("OK")
 """)
-    env = dict(os.environ, PYTHONPATH="src")
+    env = dict(os.environ, PYTHONPATH="src",
+               XLA_FLAGS=_with_host_devices(os.environ.get("XLA_FLAGS", "")))
     res = subprocess.run([sys.executable, str(prog)], capture_output=True,
                          text=True, env=env, cwd=os.getcwd(), timeout=600)
     assert res.returncode == 0, res.stderr[-2000:]
+    if "SKIP" in res.stdout:
+        pytest.skip(res.stdout.strip())
     assert "OK" in res.stdout
 
 

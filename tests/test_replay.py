@@ -4,6 +4,12 @@ invariants and the staging/flush semantics."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install "
+    "hypothesis); deterministic replay coverage lives in "
+    "test_replay_wraparound.py")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.replay import (replay_add_batch, replay_init, replay_sample,

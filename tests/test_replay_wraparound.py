@@ -1,0 +1,84 @@
+"""Deterministic replay ring-buffer coverage (no hypothesis dependency):
+wraparound flushes larger than the remaining capacity, and the
+n > capacity truncation guard whose scatter used to be order-undefined."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.replay import (replay_add_batch, replay_capacity,
+                               replay_init, replay_sample)
+
+OBS = (2, 2, 1)
+
+
+def _batch(start: int, n: int):
+    obs = np.arange(start, start + n, dtype=np.uint8)[:, None, None, None]
+    return {
+        "obs": jnp.asarray(np.broadcast_to(obs, (n,) + OBS)),
+        "action": jnp.arange(start, start + n, dtype=jnp.int32),
+        "reward": jnp.arange(start, start + n, dtype=jnp.float32),
+        "next_obs": jnp.asarray(np.broadcast_to(obs, (n,) + OBS)),
+        "done": jnp.zeros((n,), jnp.bool_),
+    }
+
+
+def _add_one_by_one(state, batch):
+    n = batch["action"].shape[0]
+    for i in range(n):
+        state = replay_add_batch(state, {k: v[i:i + 1]
+                                         for k, v in batch.items()})
+    return state
+
+
+@pytest.mark.parametrize("cap,fill,n", [
+    (8, 6, 4),     # wraps: 2 at the end, 2 at the front
+    (8, 7, 8),     # n == cap, cursor mid-buffer
+    (5, 3, 4),     # non-power-of-two capacity
+])
+def test_wraparound_matches_sequential_adds(cap, fill, n):
+    a = replay_add_batch(replay_init(cap, OBS), _batch(0, fill))
+    b = _add_one_by_one(replay_init(cap, OBS), _batch(0, fill))
+    a = replay_add_batch(a, _batch(100, n))
+    b = _add_one_by_one(b, _batch(100, n))
+    for k in ("obs", "action", "reward", "next_obs", "done",
+              "cursor", "size"):
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]), k)
+
+
+@pytest.mark.parametrize("cap,n", [(4, 7), (4, 8), (4, 11), (8, 17)])
+def test_overflow_batch_keeps_last_capacity_items(cap, n):
+    """A flush larger than the buffer keeps exactly the last cap items,
+    at the slots sequential appends would have left them in."""
+    state = replay_add_batch(replay_init(cap, OBS), _batch(0, 2))
+    state = replay_add_batch(state, _batch(10, n))
+    expect = _add_one_by_one(
+        replay_add_batch(replay_init(cap, OBS), _batch(0, 2)), _batch(10, n))
+    for k in ("obs", "action", "reward", "next_obs", "done",
+              "cursor", "size"):
+        np.testing.assert_array_equal(np.asarray(state[k]),
+                                      np.asarray(expect[k]), k)
+    assert int(state["size"]) == cap
+    assert int(state["cursor"]) == (2 + n) % cap
+    # surviving actions are the last cap of the flush, each exactly once
+    assert sorted(np.asarray(state["action"]).tolist()) == list(
+        range(10 + n - cap, 10 + n))
+
+
+def test_overflow_scatter_indices_unique():
+    """The truncation guard must never hand .at[idx].set duplicate
+    indices (duplicate scatter order is undefined)."""
+    cap, n = 4, 11
+    cursor = 3
+    offset = jnp.arange(min(n, cap), dtype=jnp.int32) + (n - cap)
+    idx = np.asarray((cursor + offset) % cap)
+    assert len(set(idx.tolist())) == len(idx)
+
+
+def test_sample_after_overflow_in_range():
+    state = replay_add_batch(replay_init(4, OBS), _batch(50, 9))
+    out = replay_sample(state, jax.random.PRNGKey(0), 16)
+    acts = np.asarray(out["action"])
+    assert set(acts.tolist()) <= set(range(55, 59))
+    assert replay_capacity(state) == 4
