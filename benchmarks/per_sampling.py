@@ -1,0 +1,94 @@
+"""PER hot-path microbenchmark: stratified segment-tree sampling vs the
+uniform baseline, across buffer capacities and the backends runnable on
+this host (ref always; interpret when requested — it is orders of
+magnitude slower and only validates kernel logic).
+
+  PYTHONPATH=src python -m benchmarks.per_sampling [--interpret]
+
+Reports us/call for one jitted (sample + priority-flush) round at the
+paper's minibatch size, i.e. the per-update replay overhead PER adds on
+top of uniform sampling.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.replay import (per_flush_priorities, per_sample, replay_init,
+                               replay_add_batch, replay_sample)
+
+OBS = (10, 10, 2)
+BATCH = 32
+
+
+def _fill(capacity: int, prioritized: bool):
+    state = replay_init(capacity, OBS, prioritized=prioritized)
+    n = capacity
+    batch = {
+        "obs": jnp.zeros((n,) + OBS, jnp.uint8),
+        "action": jnp.zeros((n,), jnp.int32),
+        "reward": jnp.arange(n, dtype=jnp.float32) % 7,
+        "next_obs": jnp.zeros((n,) + OBS, jnp.uint8),
+        "done": jnp.zeros((n,), jnp.bool_),
+    }
+    state = replay_add_batch(state, batch)
+    if prioritized:
+        state = dict(state)
+        state["priority"] = state["priority"].at[:n].set(
+            1.0 + jnp.arange(n, dtype=jnp.float32) % 13)
+    return state
+
+
+def _time(fn, *args, iters: int = 50) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def main(argv=None) -> List[Dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--interpret", action="store_true",
+                    help="also time the Pallas interpreter (very slow)")
+    ap.add_argument("--capacities", default="1024,16384,262144")
+    args = ap.parse_args(argv)
+
+    backends = ["ref"] + (["interpret"] if args.interpret else [])
+    rows = []
+    for cap in (int(c) for c in args.capacities.split(",")):
+        uni = _fill(cap, prioritized=False)
+        uniform = jax.jit(
+            lambda s, k: replay_sample(s, k, BATCH)["action"])
+        us_uniform = _time(uniform, uni, jax.random.PRNGKey(0))
+        rows.append({"capacity": cap, "sampler": "uniform",
+                     "us_per_call": us_uniform})
+        print(f"cap={cap:7d} uniform              {us_uniform:9.1f} us",
+              flush=True)
+
+        per = _fill(cap, prioritized=True)
+        for b in backends:
+            def per_round(s, k, _b=b):
+                batch = per_sample(s, k, BATCH, jnp.float32(0.4), backend=_b)
+                pending = jnp.zeros_like(s["priority"]).at[
+                    batch["index"]].max(batch["reward"] + 1.0)
+                return per_flush_priorities(s, pending)["priority"]
+
+            us = _time(jax.jit(per_round), per, jax.random.PRNGKey(0),
+                       iters=50 if b == "ref" else 2)
+            rows.append({"capacity": cap, "sampler": f"per_{b}",
+                         "us_per_call": us})
+            print(f"cap={cap:7d} per[{b:9s}]       {us:9.1f} us "
+                  f"({us / max(us_uniform, 1e-9):.1f}x uniform)", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -253,6 +253,35 @@ class TrainConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class VariantConfig:
+    """Off-policy DQN variant family, orthogonal to the execution strategy.
+
+    The paper closes arguing its framework "should be generalizable to a
+    large number of off-policy deep reinforcement learning methods";
+    this config is that family: double Q-learning (van Hasselt et al.
+    2016), dueling heads (Wang et al. 2016), proportional prioritized
+    replay (Schaul et al. 2016) and n-step returns (Sutton 1988), each
+    independently toggleable and all composable (``rainbow_lite``).
+    Defaults reproduce vanilla uniform-replay DQN exactly.
+    """
+
+    name: str = "dqn"
+    double: bool = False          # bootstrap from argmax of the online net
+    dueling: bool = False         # V + (A - mean A) head split
+    prioritized: bool = False     # proportional PER via the segment tree
+    n_step: int = 1               # n-step return accumulation in the sampler
+    per_alpha: float = 0.6        # priority exponent (Schaul et al. Table 3)
+    per_beta0: float = 0.4        # initial IS-correction exponent
+    per_beta_anneal_steps: int = 1_000_000   # beta -> 1 over this horizon
+    per_eps: float = 1e-3         # additive mass so td=0 stays sampleable
+
+    def validate(self) -> None:
+        assert self.n_step >= 1, self.n_step
+        assert 0.0 <= self.per_alpha <= 1.0, self.per_alpha
+        assert 0.0 <= self.per_beta0 <= 1.0, self.per_beta0
+
+
+@dataclasses.dataclass(frozen=True)
 class DQNConfig:
     """Paper hyperparameters (Mnih et al. 2015 / Table 5 of the paper)."""
 
@@ -274,6 +303,7 @@ class DQNConfig:
     frame_stack: int = 4
     concurrent: bool = True              # Concurrent Training enabled
     synchronized: bool = True            # Synchronized Execution enabled
+    variant: VariantConfig = VariantConfig()   # off-policy variant family
 
     @property
     def updates_per_cycle(self) -> int:

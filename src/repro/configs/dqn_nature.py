@@ -1,5 +1,8 @@
 """The paper's own network: the Nature-DQN convolutional Q-network
-(Mnih et al. 2015), consuming 84x84x4 stacked grayscale frames.
+(Mnih et al. 2015), consuming 84x84x4 stacked grayscale frames, plus the
+off-policy variant presets selectable via ``--variant`` in the RL
+launchers (the paper's "generalizable to a large number of off-policy
+methods" claim, made concrete).
 
 Not part of the assigned-architecture pool; used by the DQN reproduction
 (core/, envs/, benchmarks/table1_speed.py).
@@ -7,6 +10,8 @@ Not part of the assigned-architecture pool; used by the DQN reproduction
 
 import dataclasses
 from typing import Tuple
+
+from repro.config import VariantConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -17,6 +22,30 @@ class NatureCNNConfig:
     convs: Tuple[Tuple[int, int, int], ...] = ((32, 8, 4), (64, 4, 2), (64, 3, 1))
     hidden: int = 512
     n_actions: int = 18  # full ALE action set upper bound
+    dueling: bool = False  # V + (A - mean A) head split (Wang et al. 2016)
 
 
 CONFIG = NatureCNNConfig()
+
+
+# ---------------------------------------------------------------------------
+# Variant presets: name -> VariantConfig. ``rainbow_lite`` composes every
+# toggle (the distributional/noisy components of full Rainbow are out of
+# scope); see the README variant matrix for what each changes.
+# ---------------------------------------------------------------------------
+VARIANTS = {
+    "dqn": VariantConfig(name="dqn"),
+    "double": VariantConfig(name="double", double=True),
+    "dueling": VariantConfig(name="dueling", dueling=True),
+    "per": VariantConfig(name="per", prioritized=True),
+    "rainbow_lite": VariantConfig(name="rainbow_lite", double=True,
+                                  dueling=True, prioritized=True, n_step=3),
+}
+
+
+def get_variant(name: str) -> VariantConfig:
+    try:
+        return VARIANTS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown variant {name!r}; available: {sorted(VARIANTS)}") from None

@@ -49,6 +49,12 @@ class ALConfig:
     temperature: float = 1.0
     reward_modulus: int = 7
     reward_target: int = 1
+    # prioritized replay over |advantage| via the segment-tree kernel —
+    # the LLM-path instantiation of the DQN VariantConfig.prioritized
+    # toggle (uniform minibatches when False)
+    prioritized: bool = False
+    per_alpha: float = 0.6
+    per_eps: float = 1e-3
 
 
 def synthetic_reward(tokens: jax.Array, prompt_len: int, modulus: int,

@@ -18,21 +18,30 @@ disjoint device sets (see core/actor_learner.py). Because 𝒟 is frozen
 during the training burst and the flush is ordered, results are
 deterministic — bit-equal to the sequential oracle in
 tests/test_concurrent.py.
+
+The off-policy variant family (``cfg.variant``) preserves that
+structure. Under PER the trainer samples from the snapshot's sum-tree
+(built once at the boundary) and *stages* its priority updates exactly
+like the sampler stages experiences; both flush at the next sync point
+(priorities first, then the staged transitions, whose slots enter at
+max priority). n-step aggregation happens on the staging buffer before
+the flush. Every variant therefore keeps the paper's snapshot-𝒟
+determinism guarantee — locked in by tests/test_variants.py.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Callable, Dict, NamedTuple, Tuple
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import DQNConfig
 from repro.core.dqn import make_update_fn
-from repro.core.replay import ReplayState, replay_add_batch, replay_sample
-from repro.core.synchronized import SamplerState, sync_round
+from repro.core.replay import (ReplayState, per_flush_priorities, per_sample,
+                               per_stage_priorities, per_tree,
+                               replay_add_batch, replay_sample)
+from repro.core.synchronized import SamplerState, nstep_aggregate, sync_round
 from repro.envs.games import EnvSpec
 from repro.optim.schedule import linear_epsilon
 
@@ -47,15 +56,20 @@ class TrainerCarry(NamedTuple):
 
 def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
                           cfg: DQNConfig, frame_size: int = 84,
-                          cycle_steps: int = 0) -> Callable:
-    """Build the jitted C-cycle. ``cycle_steps`` overrides C for tests.
+                          cycle_steps: int = 0,
+                          kernel_backend: Optional[str] = None) -> Callable:
+    """Build the jitted C-cycle. ``cycle_steps`` overrides C for tests;
+    ``kernel_backend`` is the segment-tree kernel request (PER only).
     Returns cycle(carry) -> (carry', metrics)."""
     C = cycle_steps or cfg.target_update_period
     W = cfg.n_envs
     assert C % W == 0, (C, W)
     rounds = C // W
     updates = max(C // cfg.train_period, 1)
-    update_fn = make_update_fn(q_forward, opt, cfg)
+    variant = cfg.variant
+    variant.validate()
+    assert rounds >= variant.n_step, (rounds, variant.n_step)
+    update_fn = make_update_fn(q_forward, opt, cfg, variant)
     eps_fn = linear_epsilon(cfg.eps_start, cfg.eps_end, cfg.eps_anneal_steps)
 
     def cycle(carry: TrainerCarry) -> Tuple[TrainerCarry, Dict[str, jax.Array]]:
@@ -77,21 +91,50 @@ def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
         # --- trainer: C/F updates on θ from the frozen snapshot --------
         ktrain = jax.random.fold_in(jax.random.PRNGKey(17), carry.step)
 
-        def train_body(tc, k):
-            params, opt_state = tc
-            batch = replay_sample(replay_snapshot, k, cfg.minibatch_size)
-            params, opt_state, loss = update_fn(params, target_params,
-                                                opt_state, batch)
-            return (params, opt_state), loss
+        if variant.prioritized:
+            # The snapshot's sampling distribution: one tree build at the
+            # boundary, frozen for the whole training burst.
+            tree = per_tree(replay_snapshot)
+            beta = jnp.minimum(
+                1.0, variant.per_beta0 + (1.0 - variant.per_beta0)
+                * carry.step.astype(jnp.float32)
+                / variant.per_beta_anneal_steps)
 
-        (params, opt_state), losses = jax.lax.scan(
-            train_body, (carry.params, carry.opt_state),
-            jax.random.split(ktrain, updates))
+            def train_body(tc, k):
+                params, opt_state, pending = tc
+                batch = per_sample(replay_snapshot, k, cfg.minibatch_size,
+                                   beta, tree=tree, backend=kernel_backend)
+                params, opt_state, loss, td_abs = update_fn(
+                    params, target_params, opt_state, batch)
+                pending = per_stage_priorities(pending, batch["index"],
+                                               td_abs, variant.per_alpha,
+                                               variant.per_eps)
+                return (params, opt_state, pending), loss
 
-        # --- flush staged experiences into 𝒟 ---------------------------
-        flat = {k: v.reshape((rounds * W,) + v.shape[2:])
-                for k, v in staged.items()}
-        replay = replay_add_batch(carry.replay, flat)
+            pending0 = jnp.zeros_like(replay_snapshot["priority"])
+            (params, opt_state, pending), losses = jax.lax.scan(
+                train_body, (carry.params, carry.opt_state, pending0),
+                jax.random.split(ktrain, updates))
+        else:
+            def train_body(tc, k):
+                params, opt_state = tc
+                batch = replay_sample(replay_snapshot, k, cfg.minibatch_size)
+                params, opt_state, loss, _ = update_fn(params, target_params,
+                                                       opt_state, batch)
+                return (params, opt_state), loss
+
+            (params, opt_state), losses = jax.lax.scan(
+                train_body, (carry.params, carry.opt_state),
+                jax.random.split(ktrain, updates))
+
+        # --- flush at the sync point: staged priorities, then staged ---
+        # experiences (new slots enter at the updated max priority) -----
+        replay = carry.replay
+        if variant.prioritized:
+            replay = per_flush_priorities(replay, pending)
+        agg = nstep_aggregate(staged, variant.n_step, cfg.discount)
+        flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in agg.items()}
+        replay = replay_add_batch(replay, flat)
 
         metrics = {
             "loss": jnp.mean(losses),
@@ -109,7 +152,9 @@ def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
 def prepopulate(spec: EnvSpec, q_forward: Callable, cfg: DQNConfig,
                 replay: ReplayState, sampler: SamplerState,
                 n: int, frame_size: int = 84):
-    """Fill 𝒟 with n uniform-random transitions (the paper's N=50 000)."""
+    """Fill 𝒟 with n uniform-random transitions (the paper's N=50 000).
+    On a prioritized replay the slots enter at max priority (1.0 before
+    any TD error has been observed)."""
     W = cfg.n_envs
     rounds = max(n // W, 1)
 
@@ -122,5 +167,6 @@ def prepopulate(spec: EnvSpec, q_forward: Callable, cfg: DQNConfig,
         return s, tr
 
     sampler, staged = jax.lax.scan(body, sampler, None, length=rounds)
-    flat = {k: v.reshape((rounds * W,) + v.shape[2:]) for k, v in staged.items()}
+    agg = nstep_aggregate(staged, cfg.variant.n_step, cfg.discount)
+    flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in agg.items()}
     return replay_add_batch(replay, flat), sampler

@@ -30,6 +30,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import ModelConfig
 from repro.core.actor_learner import ALConfig, synthetic_reward
+from repro.core.replay import stratified_indices
+from repro.kernels.segment_tree import next_pow2, tree_build
 from repro.models import transformer as T
 from repro.models.layers import ExecConfig, softmax_cross_entropy
 from repro.optim import adamw
@@ -78,7 +80,7 @@ class DisaggregatedActorLearner:
                                        al.reward_modulus, al.reward_target)
             return seqs, rewards - jnp.mean(rewards), jnp.mean(rewards)
 
-        def learner_fn(params, opt_state, seqs, advantages, key):
+        def learner_fn(params, opt_state, seqs, advantages, size, key):
             def loss_fn(p, s, a):
                 logits, aux = T.forward(cfg, ec, p, s[:, :-1])
                 pos = jnp.arange(L - 1)[None, :]
@@ -87,9 +89,33 @@ class DisaggregatedActorLearner:
                 return softmax_cross_entropy(logits, s[:, 1:], cfg.vocab,
                                              mask=w) + aux
 
+            if al.prioritized:
+                # Prioritize by the *positive* advantage part — the
+                # LLM-path reading of proportional PER. The loss weights
+                # rows by max(a, 0), so negative-advantage rows carry
+                # zero gradient; sampling mass follows the gradient
+                # contribution, not |a|. The tree is built once per
+                # cycle on the (frozen) replay snapshot, mirroring
+                # core/concurrent; unfilled slots get zero mass.
+                cap = al.replay_capacity
+                pri = jnp.where(jnp.arange(cap) < size,
+                                (jnp.maximum(advantages, 0.0) + al.per_eps)
+                                ** al.per_alpha, 0.0)
+                pcap = next_pow2(cap)
+                tree = tree_build(jnp.zeros((pcap,), jnp.float32)
+                                  .at[:cap].set(pri))
+
+            def pick(k):
+                if not al.prioritized:
+                    # uniform over the *filled* prefix, like the
+                    # prioritized branch (unfilled rows are zero-mass)
+                    return jax.random.randint(k, (al.minibatch,), 0,
+                                              jnp.maximum(size, 1))
+                return stratified_indices(tree, k, al.minibatch, size)
+
             def body(tc, k):
                 p, st = tc
-                idx = jax.random.randint(k, (al.minibatch,), 0, seqs.shape[0])
+                idx = pick(k)
                 loss, g = jax.value_and_grad(loss_fn)(p, seqs[idx],
                                                       advantages[idx])
                 upd, st = self.opt.update(g, st, p)
@@ -133,7 +159,8 @@ class DisaggregatedActorLearner:
 
         if self.size > 0:
             self.params, self.opt_state, loss = self._learner(
-                self.params, self.opt_state, self.seqs, self.advs, kt)  # async
+                self.params, self.opt_state, self.seqs, self.advs,
+                jnp.int32(self.size), kt)  # async
         else:
             loss = jnp.float32(0.0)
 

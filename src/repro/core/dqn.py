@@ -2,30 +2,68 @@
 and the gradient update — shared verbatim by the sequential baseline and
 the Concurrent/Synchronized runtime (the paper stresses that all variants
 share time-critical code so measured speedups are attributable to the
-execution framework alone)."""
+execution framework alone).
+
+The off-policy variant family (``VariantConfig``) plugs in here: double
+Q-learning swaps the bootstrap argmax to the online network, n-step
+returns raise the bootstrap discount to γⁿ (rewards are pre-aggregated
+by the sampler, see ``synchronized.nstep_aggregate``), and prioritized
+replay threads per-sample importance-sampling weights into the Huber
+mean and reads the per-sample TD errors back out for the priority
+update. With the default variant every formula below reduces to the
+vanilla path bit-for-bit.
+"""
 
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import DQNConfig
+from repro.config import DQNConfig, VariantConfig
 
 
 def q_loss(params, target_params, batch: Dict[str, jax.Array],
            q_forward: Callable, discount: float) -> jax.Array:
     """Eq. (1) with the standard Mnih-style TD-error clipping (Huber):
     quadratic within [-1, 1], linear outside."""
+    loss, _ = q_loss_variant(params, target_params, batch, q_forward,
+                             discount, VariantConfig())
+    return loss
+
+
+def q_loss_variant(params, target_params, batch: Dict[str, jax.Array],
+                   q_forward: Callable, discount: float,
+                   variant: VariantConfig):
+    """Variant-aware Eq. (1). Returns (scalar loss, per-sample |td|).
+
+    * double: a* = argmax_a Q_θ(s', a); bootstrap = Q_θ⁻(s', a*)
+      (van Hasselt et al. 2016) instead of max_a Q_θ⁻(s', a);
+    * n-step: batch rewards hold Σ γᵏ r (masked past the first done), so
+      the bootstrap discount is γⁿ and ``done`` means "episode ended
+      within the window";
+    * prioritized: ``batch['weight']`` scales each sample's Huber term
+      (the IS correction); absent, the mean is unweighted.
+    """
     q = q_forward(params, batch["obs"])                          # (B, A)
     qa = jnp.take_along_axis(q, batch["action"][:, None], axis=1)[:, 0]
     q_next = q_forward(target_params, batch["next_obs"])
-    bootstrap = jnp.max(q_next, axis=-1)
-    y = batch["reward"] + discount * jnp.where(batch["done"], 0.0, bootstrap)
+    if variant.double:
+        q_next_online = q_forward(params, batch["next_obs"])
+        a_star = jnp.argmax(q_next_online, axis=-1)
+        bootstrap = jnp.take_along_axis(q_next, a_star[:, None], axis=1)[:, 0]
+    else:
+        bootstrap = jnp.max(q_next, axis=-1)
+    disc_n = discount ** variant.n_step
+    y = batch["reward"] + disc_n * jnp.where(batch["done"], 0.0, bootstrap)
     td = jax.lax.stop_gradient(y) - qa
     huber = jnp.where(jnp.abs(td) <= 1.0, 0.5 * td * td, jnp.abs(td) - 0.5)
-    return jnp.mean(huber)
+    if "weight" in batch:
+        loss = jnp.mean(batch["weight"] * huber)
+    else:
+        loss = jnp.mean(huber)
+    return loss, jax.lax.stop_gradient(jnp.abs(td))
 
 
 def egreedy(q_values: jax.Array, eps: jax.Array, key: jax.Array) -> jax.Array:
@@ -39,15 +77,39 @@ def egreedy(q_values: jax.Array, eps: jax.Array, key: jax.Array) -> jax.Array:
     return jnp.where(explore, rand, greedy).astype(jnp.int32)
 
 
-def make_update_fn(q_forward: Callable, opt, cfg: DQNConfig):
-    """One minibatch gradient step: (params, target, opt_state, batch) ->
-    (params', opt_state', loss)."""
+def make_update_fn(q_forward: Callable, opt, cfg: DQNConfig,
+                   variant: Optional[VariantConfig] = None):
+    """One minibatch gradient step.
+
+    The loss follows ``cfg.variant`` (callers may override with an
+    explicit ``variant``), so the baseline and host runner apply the
+    same loss-level variants (double Q-learning) as the concurrent
+    runtime — their *control flow* stays standard DQN (uniform replay,
+    immediate 1-step writes), which is the baseline's point. Because
+    those paths store 1-step transitions, the n-step bootstrap discount
+    is neutralized on the legacy contract (γⁿ is only valid after
+    ``nstep_aggregate``, which only the concurrent cycle runs).
+
+    ``variant=None`` (the legacy contract, used by the baseline and the
+    host runner): (params, target, opt_state, batch) ->
+    (params', opt_state', loss). With an explicit ``VariantConfig`` the
+    update additionally returns the per-sample |td| for the PER
+    priority staging: -> (params', opt_state', loss, td_abs)."""
+    import dataclasses
+
     from repro.optim.base import apply_updates
 
+    v = variant if variant is not None else dataclasses.replace(
+        cfg.variant, n_step=1)
+
     def update(params, target_params, opt_state, batch):
-        loss, grads = jax.value_and_grad(q_loss)(
-            params, target_params, batch, q_forward, cfg.discount)
+        (loss, td_abs), grads = jax.value_and_grad(
+            q_loss_variant, has_aux=True)(
+            params, target_params, batch, q_forward, cfg.discount, v)
         updates, opt_state = opt.update(grads, opt_state, params)
-        return apply_updates(params, updates), opt_state, loss
+        new_params = apply_updates(params, updates)
+        if variant is None:
+            return new_params, opt_state, loss
+        return new_params, opt_state, loss, td_abs
 
     return update

@@ -9,6 +9,16 @@ output, and the flush is one ``replay_add_batch`` at the end of the
 jitted cycle — 𝒟 is immutable during training *by dataflow construction*,
 which is the determinism guarantee the paper argues for.
 
+Prioritized replay (Schaul et al. 2016) extends the same state dict with
+a leaf-mass array for the segment/sum-tree (``kernels/segment_tree``).
+The staging discipline carries over: priority updates computed by the
+trainer are *staged* during the cycle and flushed only at the sync
+point (``per_flush_priorities``), so the snapshot's sampling
+distribution is frozen for the whole training burst — the PER analogue
+of the snapshot-𝒟 guarantee. Staged updates combine by ``max`` (an
+order-independent reduction), keeping the flush deterministic even when
+one slot is sampled by several minibatches.
+
 Transitions are stored as full (obs, action, reward, next_obs, done)
 records. Storage dtype for observations is uint8 (the paper's 1-byte
 pixel economy).
@@ -16,17 +26,22 @@ pixel economy).
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kops
+from repro.kernels.segment_tree import next_pow2, tree_build
+
 ReplayState = Dict[str, jax.Array]
+
+FIELDS = ("obs", "action", "reward", "next_obs", "done")
 
 
 def replay_init(capacity: int, obs_shape: Tuple[int, ...],
-                obs_dtype=jnp.uint8) -> ReplayState:
-    return {
+                obs_dtype=jnp.uint8, prioritized: bool = False) -> ReplayState:
+    state = {
         "obs": jnp.zeros((capacity,) + obs_shape, obs_dtype),
         "action": jnp.zeros((capacity,), jnp.int32),
         "reward": jnp.zeros((capacity,), jnp.float32),
@@ -35,6 +50,17 @@ def replay_init(capacity: int, obs_shape: Tuple[int, ...],
         "cursor": jnp.zeros((), jnp.int32),
         "size": jnp.zeros((), jnp.int32),
     }
+    if prioritized:
+        # Leaf masses of the sum-tree, padded to a power of two so the
+        # tree is perfect; slots >= capacity stay 0 forever (never
+        # sampled). Unfilled slots < capacity also carry 0 mass, which
+        # is how the prioritized path masks them.
+        state["priority"] = jnp.zeros((next_pow2(capacity),), jnp.float32)
+        # Running max of priority mass; new transitions enter at this
+        # mass so every experience is replayed at least once (Schaul
+        # et al. §3.3).
+        state["max_priority"] = jnp.ones((), jnp.float32)
+    return state
 
 
 def replay_capacity(state: ReplayState) -> int:
@@ -43,6 +69,10 @@ def replay_capacity(state: ReplayState) -> int:
 
 def replay_size(state: ReplayState) -> jax.Array:
     return state["size"]
+
+
+def replay_is_prioritized(state: ReplayState) -> bool:
+    return "priority" in state
 
 
 def replay_add_batch(state: ReplayState, batch: Dict[str, jax.Array]) -> ReplayState:
@@ -54,7 +84,11 @@ def replay_add_batch(state: ReplayState, batch: Dict[str, jax.Array]) -> ReplayS
     prefix would be overwritten before it could ever be sampled), so the
     overflowing prefix is dropped up front. This also keeps the scatter
     indices unique — with duplicates, ``.at[idx].set`` applies them in
-    undefined order."""
+    undefined order.
+
+    On a prioritized state the overwritten slots' old priority mass is
+    replaced by the current ``max_priority`` (new experiences enter at
+    max priority), so stale mass can never outlive its transition."""
     cap = replay_capacity(state)
     n = batch["action"].shape[0]
     offset = jnp.arange(min(n, cap), dtype=jnp.int32)
@@ -63,14 +97,98 @@ def replay_add_batch(state: ReplayState, batch: Dict[str, jax.Array]) -> ReplayS
         offset = offset + (n - cap)
     idx = (state["cursor"] + offset) % cap
     new = dict(state)
-    for k in ("obs", "action", "reward", "next_obs", "done"):
+    for k in FIELDS:
         new[k] = state[k].at[idx].set(batch[k].astype(state[k].dtype))
+    if replay_is_prioritized(state):
+        new["priority"] = state["priority"].at[idx].set(state["max_priority"])
     new["cursor"] = (state["cursor"] + n) % cap
     new["size"] = jnp.minimum(state["size"] + n, cap)
     return new
 
 
 def replay_sample(state: ReplayState, key: jax.Array, n: int) -> Dict[str, jax.Array]:
-    """Uniform minibatch with replacement (as in Mnih et al. 2015)."""
+    """Uniform minibatch with replacement (as in Mnih et al. 2015).
+
+    Only filled slots are drawn: ``randint``'s maxval is exclusive, so
+    indices are uniform on [0, size) whenever size >= 1. An empty
+    buffer degrades to slot 0 (the max(size, 1) floor) rather than an
+    out-of-range read — locked in by
+    test_replay_wraparound.test_uniform_sample_masks_unfilled_slots."""
     idx = jax.random.randint(key, (n,), 0, jnp.maximum(state["size"], 1))
-    return {k: state[k][idx] for k in ("obs", "action", "reward", "next_obs", "done")}
+    return {k: state[k][idx] for k in FIELDS}
+
+
+# ---------------------------------------------------------------------------
+# prioritized sampling + deferred priority updates
+# ---------------------------------------------------------------------------
+
+def per_tree(state: ReplayState) -> jax.Array:
+    """The (2P,) sum-tree over the current leaf masses (pure XLA; built
+    once per cycle on the frozen snapshot)."""
+    return tree_build(state["priority"])
+
+
+def stratified_indices(tree: jax.Array, key: jax.Array, n: int,
+                       size: jax.Array,
+                       backend: Optional[str] = None) -> jax.Array:
+    """n stratified inverse-CDF draws from a (2P,) sum-tree: the CDF
+    [0, total) splits into n equal strata, one uniform draw each, mapped
+    to leaves by the segment-tree kernel. Indices are clamped to the
+    filled prefix [0, max(size, 1)) — zero-mass leaves are unreachable
+    except at exact CDF boundaries (measure-zero), where the clamp
+    applies. Shared by ``per_sample`` and the disaggregated learner."""
+    total = tree[1]
+    u = jax.random.uniform(key, (n,))
+    targets = (jnp.arange(n, dtype=jnp.float32) + u) / n * total
+    idx = kops.segment_tree_sample(tree, targets, backend=backend)
+    return jnp.minimum(idx, jnp.maximum(size, 1) - 1)
+
+
+def per_sample(state: ReplayState, key: jax.Array, n: int, beta: jax.Array,
+               tree: Optional[jax.Array] = None,
+               backend: Optional[str] = None) -> Dict[str, jax.Array]:
+    """Stratified proportional minibatch (Schaul et al. 2016 §3.3).
+
+    The CDF [0, total) is split into n equal strata, one uniform draw
+    each; the segment-tree kernel maps the draws to leaf indices. Extra
+    fields in the returned batch: ``index`` (for the priority update)
+    and ``weight`` (importance-sampling correction (N·P(i))^-β,
+    normalized by its max). ``tree`` lets the caller pass a prebuilt
+    snapshot tree; ``backend`` is the kernel-backend request.
+    """
+    if tree is None:
+        tree = per_tree(state)
+    total = tree[1]
+    size = jnp.maximum(state["size"], 1)
+    idx = stratified_indices(tree, key, n, state["size"], backend=backend)
+    # With total > 0 every sampled leaf has positive mass; the floor only
+    # bites on an all-zero tree (empty buffer), where it degrades to
+    # equal probabilities -> unit weights instead of inf/inf = NaN.
+    probs = jnp.maximum(state["priority"][idx] / jnp.maximum(total, 1e-30),
+                        1e-30)
+    w = (size.astype(jnp.float32) * probs) ** (-beta)
+    w = w / jnp.maximum(jnp.max(w), 1e-30)
+    out = {k: state[k][idx] for k in FIELDS}
+    out["index"] = idx
+    out["weight"] = w
+    return out
+
+
+def per_stage_priorities(pending: jax.Array, idx: jax.Array,
+                         td_abs: jax.Array, alpha: float,
+                         eps: float) -> jax.Array:
+    """Stage new priority masses (|td| + ε)^α into ``pending`` (a (P,)
+    array, 0 = untouched). Duplicate indices combine by ``max`` — an
+    order-independent reduction, so the later flush is deterministic
+    regardless of scatter order."""
+    mass = (jnp.abs(td_abs) + eps) ** alpha
+    return pending.at[idx].max(mass)
+
+
+def per_flush_priorities(state: ReplayState, pending: jax.Array) -> ReplayState:
+    """Apply staged priority updates at the θ⁻ ← θ sync point (the PER
+    analogue of the staging-buffer flush)."""
+    new = dict(state)
+    new["priority"] = jnp.where(pending > 0, pending, state["priority"])
+    new["max_priority"] = jnp.maximum(state["max_priority"], jnp.max(pending))
+    return new

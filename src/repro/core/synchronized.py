@@ -64,6 +64,47 @@ def sync_round(spec: EnvSpec, q_forward: Callable, params,
     return SamplerState(env_states, new_stack, key), transitions
 
 
+def nstep_aggregate(staged: Dict[str, jax.Array], n: int,
+                    discount: float) -> Dict[str, jax.Array]:
+    """Collapse the staged (rounds, W, ...) 1-step transitions into
+    n-step transitions along the rounds axis (per stream).
+
+    For each start round t (0 <= t <= rounds-n):
+      reward   <- Σ_{k<n} γᵏ r[t+k] · Π_{j<k}(1 - done[t+j])
+                  (rewards stop accumulating after the first terminal;
+                  the terminal step's own reward is included);
+      next_obs <- next_obs[t+n-1]  (only consumed when no terminal fell
+                  inside the window — ``done`` zeroes the bootstrap
+                  otherwise, so the post-reset frames never leak in);
+      done     <- any terminal within the window.
+
+    The matching loss bootstraps with γⁿ (see ``dqn.q_loss_variant``).
+    The last n-1 rounds of a cycle lack their future context and are
+    dropped — a deterministic truncation of (n-1)·W transitions per
+    cycle, mirroring the staging-buffer semantics (nothing crosses the
+    sync point half-accumulated).
+    """
+    if n <= 1:
+        return staged
+    rounds = staged["reward"].shape[0]
+    assert rounds >= n, (rounds, n)
+    R = rounds - n + 1
+    live = jnp.ones_like(staged["reward"][:R])          # Π (1 - done) so far
+    reward = jnp.zeros_like(staged["reward"][:R])
+    done = jnp.zeros_like(staged["done"][:R])
+    for k in range(n):
+        reward = reward + (discount ** k) * live * staged["reward"][k:k + R]
+        done = done | staged["done"][k:k + R]
+        live = live * (1.0 - staged["done"][k:k + R].astype(live.dtype))
+    return {
+        "obs": staged["obs"][:R],
+        "action": staged["action"][:R],
+        "reward": reward,
+        "next_obs": staged["next_obs"][n - 1:],
+        "done": done,
+    }
+
+
 def evaluate(spec: EnvSpec, q_forward: Callable, params, key: jax.Array,
              cfg: DQNConfig, n_episodes: int = 30, frame_size: int = 84,
              max_steps: int = 1000) -> jax.Array:

@@ -50,7 +50,7 @@ REQUESTS = (AUTO, PALLAS) + CONCRETE_BACKENDS
 ENV_VAR = "REPRO_KERNEL_BACKEND"
 
 OPS = ("flash_attention", "decode_attention", "rmsnorm", "ssm_scan",
-       "slstm_scan")
+       "slstm_scan", "segment_tree")
 
 _REGISTRY: Dict[str, Dict[str, Callable]] = {}
 

@@ -33,8 +33,10 @@ from repro.kernels import ref
 from repro.kernels import (decode_attention as _decode_mod,  # noqa: F401
                            flash_attention as _flash_mod,
                            rmsnorm as _rms_mod,
+                           segment_tree as _segtree_mod,
                            slstm_scan as _slstm_mod,
                            ssm_scan as _ssm_mod)
+from repro.kernels.segment_tree import next_pow2, tree_build  # noqa: F401
 
 
 def _choose(op: str, interpret: bool, backend: Optional[str]) -> str:
@@ -176,6 +178,20 @@ def slstm_scan(wx, R, b, state, n_heads: int, chunk: int = 16,
         return ref.slstm_scan(wx, R, b, state, n_heads)
     return kb.lookup("slstm_scan", bk)(wx, R, b, state, n_heads=n_heads,
                                        chunk=chunk)
+
+
+# ---------------------------------------------------------------------------
+# segment-tree inverse-CDF sampling (PER hot path; integer output, nondiff)
+# ---------------------------------------------------------------------------
+
+def segment_tree_sample(tree, targets, interpret: bool = False,
+                        backend: Optional[str] = None):
+    """tree: (2P,) heap-layout sum-tree (see ``tree_build``); targets:
+    (n,) CDF points in [0, tree[1]). Returns (n,) int32 leaf indices."""
+    b = _choose("segment_tree", interpret, backend)
+    if b == kb.REF:
+        return ref.segment_tree_sample(tree, targets)
+    return kb.lookup("segment_tree", b)(tree, targets)
 
 
 # ---------------------------------------------------------------------------

@@ -10,6 +10,7 @@ Layouts (kernel-native):
   ssm_scan: x (B, H, S, P), dt (B, H, S), A (H,), Bm/Cm (B, S, N)
   rmsnorm: x (..., D), gamma (D,)
   slstm_scan: wx (B, S, 4d), R (4, H, Pd, Pd), b (4d,), state 4x(B, d)
+  segment_tree_sample: tree (2P,) sum-tree, targets (n,) -> (n,) int32
 """
 
 from __future__ import annotations
@@ -83,6 +84,34 @@ def rmsnorm(x, gamma, eps: float = 1e-5):
     x = x.astype(jnp.float32)
     x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
     return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def segment_tree_sample(tree, targets):
+    """Proportional prefix-sum descent over a heap-layout sum-tree.
+
+    ``tree``: (2P,) float32, P a power of two; ``tree[1]`` is the root
+    (total mass), node i's children are 2i and 2i+1, leaves occupy
+    [P, 2P). ``targets``: (n,) float32 points on the CDF in [0, total).
+    Returns the (n,) int32 leaf indices the targets fall into — the
+    inverse-CDF lookup of prioritized experience replay (Schaul et al.
+    2016). A target >= total lands on the last leaf (right-most descent),
+    matching the clamp semantics of the kernel backends.
+    """
+    P = tree.shape[0] // 2
+    depth = P.bit_length() - 1                      # log2(P), static
+    idx = jnp.ones(targets.shape, jnp.int32)
+    t = targets.astype(jnp.float32)
+
+    def body(_, carry):
+        idx, t = carry
+        left = jnp.take(tree, 2 * idx)
+        go_left = t < left
+        idx = jnp.where(go_left, 2 * idx, 2 * idx + 1)
+        t = jnp.where(go_left, t, t - left)
+        return idx, t
+
+    idx, _ = jax.lax.fori_loop(0, depth, body, (idx, t))
+    return idx - P
 
 
 def slstm_scan(wx, R, b, state, n_heads: int):

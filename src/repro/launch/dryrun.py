@@ -143,6 +143,64 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
     return rec
 
 
+def lower_dqn_variant(variant_name: str, kernel_backend: str) -> Dict[str, Any]:
+    """Lower + compile one off-policy DQN variant's jitted C-cycle (the
+    concurrent super-step, including the PER segment-tree path) and
+    extract the same roofline terms as the LLM shapes. Single-device:
+    the DQN reproduction targets commodity hosts, not the pod mesh."""
+    import jax.numpy as jnp
+
+    from repro.config import DQNConfig
+    from repro.configs.dqn_nature import NatureCNNConfig, get_variant
+    from repro.core.concurrent import (TrainerCarry, make_concurrent_cycle,
+                                       prepopulate)
+    from repro.core.replay import replay_init
+    from repro.core.synchronized import sampler_init
+    from repro.envs import get_env
+    from repro.models.nature_cnn import q_forward, q_init
+    from repro.optim import adamw
+
+    variant = get_variant(variant_name)
+    FS = 10
+    spec = get_env("catch")
+    ncfg = NatureCNNConfig(frame_size=FS, frame_stack=2, convs=((8, 3, 1),),
+                           hidden=16, n_actions=spec.n_actions,
+                           dueling=variant.dueling)
+    dcfg = DQNConfig(minibatch_size=8, replay_capacity=512,
+                     target_update_period=32, train_period=4, n_envs=4,
+                     frame_stack=2, eps_anneal_steps=1000, variant=variant)
+    key = jax.random.PRNGKey(0)
+    params = q_init(ncfg, spec.n_actions, key)
+    qf = lambda p, o: q_forward(p, o, ncfg)
+    opt = adamw(1e-3, weight_decay=0.0)
+    replay = replay_init(dcfg.replay_capacity, (FS, FS, 2),
+                         prioritized=variant.prioritized)
+    sampler = sampler_init(spec, dcfg, key, FS)
+    replay, sampler = prepopulate(spec, qf, dcfg, replay, sampler, 64, FS)
+    carry = TrainerCarry(params, opt.init(params), replay, sampler,
+                         jnp.int32(0))
+
+    rec: Dict[str, Any] = {"arch": "dqn", "shape": f"variant_{variant_name}",
+                           "mesh": "1x1", "n_chips": 1}
+    cycle = make_concurrent_cycle(spec, qf, opt, dcfg, frame_size=FS,
+                                  kernel_backend=kernel_backend)
+    t0 = time.time()
+    lowered = jax.jit(cycle).lower(carry)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    from repro.roofline.hlo_cost import analyze_text
+    hlo = analyze_text(compiled.as_text())
+    rec["flops_per_device"] = hlo["flops"]
+    rec["bytes_per_device"] = hlo["bytes"]
+    rec["collective_bytes_per_device"] = hlo["collective_bytes"]
+    rec.update(roofline_terms(hlo["flops"], hlo["bytes"],
+                              hlo["collective_bytes"]))
+    return rec
+
+
 def shard_like_params(opt_state, pshard, mesh):
     """Optimizer state trees mirror the param tree under m/v; scalars
     replicated."""
@@ -177,6 +235,48 @@ def main():
                              "mosaic", "triton"])
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
+
+    # --arch dqn: lower every off-policy DQN variant preset instead of
+    # the LLM (arch x shape x mesh) grid; --variant narrows to one preset.
+    if args.arch == "dqn":
+        from repro.configs.dqn_nature import VARIANTS, get_variant
+        if args.variant == "baseline":        # the LLM-path default tag
+            names = sorted(VARIANTS)
+        else:
+            get_variant(args.variant)         # KeyError on typos, not a sweep
+            names = [args.variant]
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        # same resume-safe accumulation as the LLM grid: load, replace
+        # matching dqn records, append — never clobber other entries
+        results = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                results = json.load(f)
+        failed = 0
+        for name in names:
+            print(f"=== dqn x {name}", flush=True)
+            try:
+                rec = lower_dqn_variant(name, args.kernel_backend)
+                rec["variant"] = name
+                print(f"    lower {rec['lower_s']}s compile "
+                      f"{rec['compile_s']}s | {rec['flops_per_device']:.3e} "
+                      f"flop/dev", flush=True)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                # keep the record schema loadable by the LLM-grid branch
+                # (it keys on arch/shape/mesh when resuming a shared file)
+                rec = {"arch": "dqn", "shape": f"variant_{name}",
+                       "mesh": "1x1", "variant": name, "error": str(e),
+                       "traceback": traceback.format_exc()[-2000:]}
+                failed += 1
+                print(f"    FAILED: {e}", flush=True)
+            results = [r for r in results
+                       if not (r.get("arch") == "dqn"
+                               and r.get("variant") == name)]
+            results.append(rec)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+        print(f"\n{len(names) - failed} OK, {failed} failed")
+        return 1 if failed else 0
 
     archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
     shapes = list(INPUT_SHAPES) if args.shape == "all" else args.shape.split(",")

@@ -8,6 +8,12 @@ Execution on a pixel environment.
 The optimizer defaults to AdamW for fast convergence on the JAX envs;
 --paper-optimizer selects Mnih's centered RMSProp (2.5e-4), faithful but
 tuned for 200M-frame Atari budgets.
+
+--variant {dqn,double,dueling,per,rainbow_lite} selects the off-policy
+variant preset (configs/dqn_nature.VARIANTS): double/dueling Q-learning,
+proportional prioritized replay over the segment-tree kernel, n-step
+returns, or all of them (rainbow_lite). --dryrun shrinks everything to a
+few seconds for the CI variant smoke job.
 """
 
 from __future__ import annotations
@@ -19,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import DQNConfig, ExecConfig
-from repro.configs.dqn_nature import NatureCNNConfig
+from repro.configs.dqn_nature import VARIANTS, NatureCNNConfig, get_variant
 from repro.envs import get_env
 from repro.models.nature_cnn import q_forward, q_init
 from repro.optim import adamw, centered_rmsprop
@@ -38,42 +44,61 @@ def main(argv=None):
     ap.add_argument("--paper-optimizer", action="store_true")
     ap.add_argument("--eval-every", type=int, default=20)
     ap.add_argument("--prepopulate", type=int, default=2048)
+    ap.add_argument("--variant", default="dqn", choices=sorted(VARIANTS),
+                    help="off-policy variant preset (configs/dqn_nature)")
+    ap.add_argument("--kernel-backend", default="auto",
+                    choices=["auto", "pallas", "interpret", "ref",
+                             "mosaic", "triton"],
+                    help="segment-tree kernel request for PER variants "
+                         "(REPRO_KERNEL_BACKEND env var overrides)")
+    ap.add_argument("--dryrun", action="store_true",
+                    help="one tiny cycle per stage (CI variant smoke)")
     ap.add_argument("--compute-dtype", default="float32",
                     choices=["float32", "bfloat16"],
                     help="Q-network compute dtype (paper default f32; "
                          "bf16 halves actor-inference bandwidth)")
     args = ap.parse_args(argv)
 
+    if args.dryrun:
+        args.cycles, args.cycle_steps = 2, 32
+        args.envs, args.prepopulate, args.eval_every = 4, 64, 2
+
+    variant = get_variant(args.variant)
     spec = get_env(args.env)
     small = args.frame_size == 10
     ncfg = NatureCNNConfig(
         frame_size=args.frame_size, frame_stack=2 if small else 4,
         convs=((16, 3, 1), (16, 3, 1)) if small else
               ((32, 8, 4), (64, 4, 2), (64, 3, 1)),
-        hidden=64 if small else 512, n_actions=spec.n_actions)
+        hidden=64 if small else 512, n_actions=spec.n_actions,
+        dueling=variant.dueling)
     dcfg = DQNConfig(
         minibatch_size=32, replay_capacity=16384,
         target_update_period=args.cycle_steps, train_period=2,
         prepopulate=args.prepopulate, n_envs=args.envs,
         frame_stack=ncfg.frame_stack,
         eps_anneal_steps=max(args.cycles * args.cycle_steps // 2, 1),
-        discount=0.9)
+        discount=0.9, variant=variant)
 
     key = jax.random.PRNGKey(0)
     params = q_init(ncfg, spec.n_actions, key)
-    ec = ExecConfig(compute_dtype=args.compute_dtype)
+    ec = ExecConfig(compute_dtype=args.compute_dtype,
+                    kernel_backend=args.kernel_backend)
     qf = lambda p, o: q_forward(p, o, ncfg, ec)
     opt = (centered_rmsprop(2.5e-4) if args.paper_optimizer
            else adamw(1e-3, weight_decay=0.0))
 
     fs = args.frame_size
-    replay = replay_init(dcfg.replay_capacity, (fs, fs, dcfg.frame_stack))
+    replay = replay_init(dcfg.replay_capacity, (fs, fs, dcfg.frame_stack),
+                         prioritized=variant.prioritized)
     sampler = sampler_init(spec, dcfg, key, fs)
     replay, sampler = jax.jit(
         lambda r, s: prepopulate(spec, qf, dcfg, r, s, dcfg.prepopulate, fs)
     )(replay, sampler)
 
-    cycle = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg, frame_size=fs))
+    cycle = jax.jit(make_concurrent_cycle(
+        spec, qf, opt, dcfg, frame_size=fs,
+        kernel_backend=args.kernel_backend))
     ev = jax.jit(lambda p, k: evaluate(spec, qf, p, k, dcfg, n_episodes=64,
                                        frame_size=fs, max_steps=64))
     carry = TrainerCarry(params, opt.init(params), replay, sampler,
@@ -84,10 +109,12 @@ def main(argv=None):
         if (i + 1) % args.eval_every == 0 or i == args.cycles - 1:
             r = float(ev(carry.params, jax.random.PRNGKey(i)))
             sps = int(carry.step) / (time.time() - t0)
-            print(f"cycle {i+1:4d} steps {int(carry.step):7d} "
+            print(f"[{args.variant}] cycle {i+1:4d} steps {int(carry.step):7d} "
                   f"eval {r:+.2f} loss {float(m['loss']):.4f} "
                   f"eps {float(m['eps']):.2f} | {sps:.0f} env-steps/s",
                   flush=True)
+    if args.dryrun:
+        print(f"DRYRUN OK variant={args.variant}", flush=True)
     return 0
 
 

@@ -32,8 +32,18 @@ def q_param_spec(cfg: NatureCNNConfig, n_actions: int) -> Dict[str, Any]:
     flat = size * size * in_ch
     spec["fc_w"] = P.Leaf((flat, cfg.hidden), (None, "mlp"), fan_in=flat)
     spec["fc_b"] = P.Leaf((cfg.hidden,), ("mlp",), init="zeros")
-    spec["out_w"] = P.Leaf((cfg.hidden, n_actions), ("mlp", None), fan_in=cfg.hidden)
-    spec["out_b"] = P.Leaf((n_actions,), (None,), init="zeros")
+    if cfg.dueling:
+        # dueling heads (Wang et al. 2016): shared trunk, separate state-
+        # value and advantage streams; Q = V + (A - mean A)
+        spec["val_w"] = P.Leaf((cfg.hidden, 1), ("mlp", None), fan_in=cfg.hidden)
+        spec["val_b"] = P.Leaf((1,), (None,), init="zeros")
+        spec["adv_w"] = P.Leaf((cfg.hidden, n_actions), ("mlp", None),
+                               fan_in=cfg.hidden)
+        spec["adv_b"] = P.Leaf((n_actions,), (None,), init="zeros")
+    else:
+        spec["out_w"] = P.Leaf((cfg.hidden, n_actions), ("mlp", None),
+                               fan_in=cfg.hidden)
+        spec["out_b"] = P.Leaf((n_actions,), (None,), init="zeros")
     return spec
 
 
@@ -63,5 +73,10 @@ def q_forward(params, frames: jax.Array, cfg: NatureCNNConfig,
         x = jax.nn.relu(x + params[f"conv{i}_b"].astype(cdt))
     x = x.reshape(x.shape[0], -1)
     x = jax.nn.relu(x @ params["fc_w"].astype(cdt) + params["fc_b"].astype(cdt))
-    q = x @ params["out_w"].astype(cdt) + params["out_b"].astype(cdt)
+    if cfg.dueling:
+        v = x @ params["val_w"].astype(cdt) + params["val_b"].astype(cdt)
+        a = x @ params["adv_w"].astype(cdt) + params["adv_b"].astype(cdt)
+        q = v + a - jnp.mean(a, axis=-1, keepdims=True)
+    else:
+        q = x @ params["out_w"].astype(cdt) + params["out_b"].astype(cdt)
     return q.astype(jnp.float32)

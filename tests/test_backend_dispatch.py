@@ -160,6 +160,36 @@ def test_rmsnorm_backends(backend):
     _assert_close(out, ref.rmsnorm(x, g), **TOL)
 
 
+def _segment_tree_case(key, P=256, n=37):
+    """Integer leaf masses + half-integer targets: every prefix sum is
+    exactly representable, so all backends (tree descent vs blockwise
+    compare-count) must agree bit-for-bit — no CDF-boundary ambiguity."""
+    from repro.kernels.segment_tree import tree_build
+    kp, kt = jax.random.split(key)
+    pri = jax.random.randint(kp, (P,), 0, 9).astype(jnp.float32)
+    pri = pri.at[0].set(3.0)                       # nonzero total
+    tree = tree_build(pri)
+    total = tree[1]
+    t = jax.random.randint(kt, (n,), 0, jnp.maximum(total.astype(jnp.int32),
+                                                    1)).astype(jnp.float32)
+    return tree, jnp.minimum(t + 0.5, total - 0.25)
+
+
+@pytest.mark.parametrize("backend", [kb.REF, kb.INTERPRET, kb.MOSAIC,
+                                     kb.TRITON])
+def test_segment_tree_backends(backend):
+    if backend not in _host_backends("segment_tree"):
+        pytest.skip(f"{backend} not runnable on {kb.platform()}")
+    for P, n in ((1, 3), (8, 5), (256, 37), (2048, 64)):
+        tree, targets = _segment_tree_case(jax.random.PRNGKey(P), P, n)
+        out = ops.segment_tree_sample(tree, targets, backend=backend)
+        expect = ref.segment_tree_sample(tree, targets)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+        # sampled leaves carry positive mass
+        leaves = np.asarray(tree)[P:]
+        assert (leaves[np.asarray(out)] > 0).all()
+
+
 @pytest.mark.parametrize("backend", [kb.REF, kb.INTERPRET, kb.MOSAIC,
                                      kb.TRITON])
 def test_slstm_scan_backends(backend):
@@ -211,6 +241,15 @@ def test_triton_decode_schedule_interpreted():
                                           interpret=True)
         _assert_close(out, ref.decode_attention(q, kc, vc, jnp.int32(cl)),
                       **TOL)
+
+
+def test_triton_segment_tree_schedule_interpreted():
+    from repro.kernels.segment_tree import segment_tree_kernel_gpu
+    for P, n in ((8, 5), (512, 33)):
+        tree, targets = _segment_tree_case(jax.random.PRNGKey(100 + P), P, n)
+        out = segment_tree_kernel_gpu(tree, targets, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(ref.segment_tree_sample(tree, targets)))
 
 
 def test_triton_ssm_schedule_interpreted():

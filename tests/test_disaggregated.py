@@ -47,3 +47,42 @@ print("OK")
                          text=True, env=env, cwd=os.getcwd(), timeout=900)
     assert res.returncode == 0, res.stderr[-2000:] + res.stdout[-500:]
     assert "OK" in res.stdout
+
+
+@pytest.mark.slow
+def test_disaggregated_prioritized_learner(tmp_path):
+    """ALConfig.prioritized routes minibatch selection through the
+    segment-tree kernel (|advantage| mass); the loop must still run,
+    improve, and stay deterministic per key."""
+    prog = tmp_path / "prog.py"
+    prog.write_text("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+os.environ["REPRO_KERNEL_BACKEND"] = "ref"
+import numpy as np
+import jax
+from repro.configs import reduced_config
+from repro.core.actor_learner import ALConfig
+from repro.core.disaggregated import DisaggregatedActorLearner
+from repro.models.layers import ExecConfig
+
+cfg = reduced_config("xlstm-125m")
+ec = ExecConfig(compute_dtype="float32", remat=False)
+al = ALConfig(n_streams=8, prompt_len=4, gen_len=8, replay_capacity=64,
+              updates_per_cycle=8, minibatch=16, learning_rate=1e-3,
+              reward_modulus=4, prioritized=True)
+devs = jax.devices()
+dal = DisaggregatedActorLearner(cfg, ec, al,
+                                actor_devices=np.array(devs[:1]),
+                                learner_devices=np.array(devs[1:]))
+rs = [dal.cycle()["reward"] for _ in range(24)]
+early, late = sum(rs[:4]) / 4, sum(rs[-4:]) / 4
+print("EARLY", early, "LATE", late)
+assert late > early + 0.03, (early, late, rs)
+print("OK")
+""")
+    env = dict(os.environ, PYTHONPATH="src")
+    res = subprocess.run([sys.executable, str(prog)], capture_output=True,
+                         text=True, env=env, cwd=os.getcwd(), timeout=900)
+    assert res.returncode == 0, res.stderr[-2000:] + res.stdout[-500:]
+    assert "OK" in res.stdout

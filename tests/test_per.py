@@ -1,0 +1,102 @@
+"""Prioritized replay: deterministic unit coverage of the sum-tree,
+stratified sampling, unfilled-slot masking, and the staged-priority
+flush semantics (no hypothesis dependency; the statistical convergence
+properties live in test_per_properties.py, degrading to skip per the
+PR-1 convention when hypothesis is absent)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.replay import (per_flush_priorities, per_sample,
+                               per_stage_priorities, replay_add_batch,
+                               replay_init)
+from repro.kernels import ops
+from repro.kernels.segment_tree import next_pow2, tree_build
+
+OBS = (3, 3, 1)
+
+
+def _batch(start: int, n: int):
+    obs = np.arange(start, start + n, dtype=np.uint8)[:, None, None, None]
+    return {
+        "obs": jnp.asarray(np.broadcast_to(obs, (n,) + OBS)),
+        "action": jnp.arange(start, start + n, dtype=jnp.int32) % 5,
+        "reward": jnp.arange(start, start + n, dtype=jnp.float32),
+        "next_obs": jnp.asarray(np.broadcast_to(obs, (n,) + OBS)),
+        "done": jnp.zeros((n,), jnp.bool_),
+    }
+
+
+def _stratified_sample(pri, n, key):
+    """Draw n stratified samples from leaf masses ``pri`` via the op."""
+    tree = tree_build(jnp.asarray(pri, jnp.float32))
+    u = jax.random.uniform(key, (n,))
+    targets = (jnp.arange(n, dtype=jnp.float32) + u) / n * tree[1]
+    return np.asarray(ops.segment_tree_sample(tree, targets, backend="ref"))
+
+
+# ---------------------------------------------------------------------------
+# deterministic unit coverage (no hypothesis dependency)
+# ---------------------------------------------------------------------------
+
+def test_tree_build_sums():
+    pri = jnp.asarray([3.0, 0.0, 1.0, 4.0, 0.0, 2.0, 5.0, 1.0])
+    tree = tree_build(pri)
+    assert tree.shape == (16,)
+    assert float(tree[1]) == 16.0                      # root = Σp
+    np.testing.assert_array_equal(np.asarray(tree[8:]), np.asarray(pri))
+    for i in range(1, 8):                              # heap invariant
+        assert float(tree[i]) == float(tree[2 * i] + tree[2 * i + 1]), i
+
+
+def test_zero_mass_leaves_never_sampled():
+    pri = np.zeros(64, np.float32)
+    hot = [3, 17, 40]
+    pri[hot] = [1.0, 2.0, 5.0]
+    idx = _stratified_sample(pri, 512, jax.random.PRNGKey(0))
+    assert set(idx.tolist()) <= set(hot)
+
+
+def test_next_pow2():
+    assert [next_pow2(n) for n in (1, 2, 3, 4, 5, 31, 32, 33)] == \
+        [1, 2, 4, 4, 8, 32, 32, 64]
+
+
+def test_per_sample_masks_unfilled_slots():
+    """Unfilled slots carry zero mass: a partially-filled prioritized
+    buffer only ever yields filled indices."""
+    state = replay_init(32, OBS, prioritized=True)
+    state = replay_add_batch(state, _batch(0, 5))
+    out = per_sample(state, jax.random.PRNGKey(1), 256, jnp.float32(0.4))
+    assert set(np.asarray(out["index"]).tolist()) <= set(range(5))
+    assert set(np.asarray(out["reward"]).astype(int).tolist()) <= set(range(5))
+
+
+def test_per_sample_weights_uniform_when_priorities_equal():
+    state = replay_init(16, OBS, prioritized=True)
+    state = replay_add_batch(state, _batch(0, 16))
+    out = per_sample(state, jax.random.PRNGKey(2), 64, jnp.float32(1.0))
+    np.testing.assert_allclose(np.asarray(out["weight"]),
+                               np.ones(64, np.float32), rtol=1e-6)
+
+
+def test_staged_priority_updates_flush_deterministically():
+    """Duplicate-index staging combines by max (order-independent), and
+    the flush replaces exactly the touched leaves."""
+    state = replay_init(8, OBS, prioritized=True)
+    state = replay_add_batch(state, _batch(0, 8))
+    pending = jnp.zeros_like(state["priority"])
+    idx = jnp.asarray([2, 5, 2, 7], jnp.int32)
+    td = jnp.asarray([0.5, 1.0, 2.0, 0.25], jnp.float32)
+    pending = per_stage_priorities(pending, idx, td, alpha=1.0, eps=0.0)
+    pending_rev = per_stage_priorities(
+        jnp.zeros_like(pending), idx[::-1], td[::-1], alpha=1.0, eps=0.0)
+    np.testing.assert_array_equal(np.asarray(pending), np.asarray(pending_rev))
+    new = per_flush_priorities(state, pending)
+    got = np.asarray(new["priority"])
+    assert got[2] == 2.0 and got[5] == 1.0 and got[7] == 0.25
+    untouched = [i for i in range(8) if i not in (2, 5, 7)]
+    np.testing.assert_array_equal(got[untouched],
+                                  np.asarray(state["priority"])[untouched])
+    assert float(new["max_priority"]) == 2.0

@@ -1,0 +1,121 @@
+"""Prioritized replay: property tests (hypothesis, degrading to skip
+per the PR-1 convention when hypothesis is absent).
+
+The statistical heart: stratified inverse-CDF sampling visits leaf i at
+most ceil(n·pᵢ/Σp)+1 and at least floor(n·pᵢ/Σp)-1 times out of n draws
+(each stratum contributes exactly one draw, and leaf i's CDF interval
+covers ~n·pᵢ/Σp strata), so empirical frequencies converge to
+priorities/Σpriorities at rate 2/n — testable with a *deterministic*
+tolerance, no flaky seeds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install "
+    "hypothesis); deterministic PER coverage lives in test_per.py and "
+    "test_replay_wraparound.py")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.replay import per_sample, replay_add_batch, replay_init
+from repro.kernels import ops
+from repro.kernels.segment_tree import next_pow2, tree_build
+
+OBS = (3, 3, 1)
+
+
+def _batch(start: int, n: int):
+    obs = np.arange(start, start + n, dtype=np.uint8)[:, None, None, None]
+    return {
+        "obs": jnp.asarray(np.broadcast_to(obs, (n,) + OBS)),
+        "action": jnp.arange(start, start + n, dtype=jnp.int32) % 5,
+        "reward": jnp.arange(start, start + n, dtype=jnp.float32),
+        "next_obs": jnp.asarray(np.broadcast_to(obs, (n,) + OBS)),
+        "done": jnp.zeros((n,), jnp.bool_),
+    }
+
+
+def _stratified_sample(pri, n, key):
+    """Draw n stratified samples from leaf masses ``pri`` via the op."""
+    tree = tree_build(jnp.asarray(pri, jnp.float32))
+    u = jax.random.uniform(key, (n,))
+    targets = (jnp.arange(n, dtype=jnp.float32) + u) / n * tree[1]
+    return np.asarray(ops.segment_tree_sample(tree, targets, backend="ref"))
+
+
+@settings(max_examples=25, deadline=None)
+@given(pri=st.lists(st.integers(0, 8), min_size=2, max_size=64).filter(
+    lambda p: sum(p) > 0),
+       seed=st.integers(0, 1000))
+def test_sampling_frequencies_converge_to_priorities(pri, seed):
+    """Empirical visit frequencies converge to pᵢ/Σp: stratification
+    bounds each leaf's count within ±(2/n + pᵢ/Σp·0) of expectation."""
+    P = next_pow2(len(pri))
+    leaf = np.zeros(P, np.float32)
+    leaf[: len(pri)] = pri
+    n = 1024
+    idx = _stratified_sample(leaf, n, jax.random.PRNGKey(seed))
+    freq = np.bincount(idx, minlength=P) / n
+    expect = leaf / leaf.sum()
+    np.testing.assert_allclose(freq, expect, atol=2.0 / n + 1e-7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(size=st.integers(1, 48), seed=st.integers(0, 1000))
+def test_uniform_priorities_reproduce_uniform_sampling(size, seed):
+    """With equal priorities over the filled prefix, the segment-tree
+    path IS the uniform sampler: each stratified draw lands on
+    floor(target / p) — the uniform inverse CDF over [0, size) — and the
+    empirical distribution matches ``replay_sample``'s (uniform over
+    filled slots) to the same stratification bound."""
+    P = next_pow2(size)
+    leaf = np.zeros(P, np.float32)
+    leaf[:size] = 2.0                    # equal mass, exactly representable
+    n = 1024
+    key = jax.random.PRNGKey(seed)
+    idx = _stratified_sample(leaf, n, key)
+    # analytic: stratified targets t land on leaf floor(t / mass).
+    # Replicate the op's f32 arithmetic bit-for-bit so no boundary flips.
+    u = np.asarray(jax.random.uniform(key, (n,))).astype(np.float32)
+    targets = ((np.arange(n, dtype=np.float32) + u)
+               / np.float32(n)) * np.float32(2.0 * size)
+    np.testing.assert_array_equal(idx, np.minimum(
+        np.floor(targets / 2.0).astype(np.int64), size - 1))
+    # distribution: uniform over the filled prefix, like replay_sample
+    freq = np.bincount(idx, minlength=P) / n
+    expect = np.where(np.arange(P) < size, 1.0 / size, 0.0)
+    np.testing.assert_allclose(freq, expect, atol=2.0 / n + 1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(pri=st.lists(st.integers(0, 16), min_size=1, max_size=48).filter(
+    lambda p: sum(p) > 0))
+def test_tree_root_and_heap_invariant(pri):
+    P = next_pow2(len(pri))
+    leaf = np.zeros(P, np.float32)
+    leaf[: len(pri)] = pri
+    tree = np.asarray(tree_build(jnp.asarray(leaf)))
+    assert tree[1] == leaf.sum()
+    for i in range(1, P):
+        assert tree[i] == tree[2 * i] + tree[2 * i + 1]
+
+
+@settings(max_examples=15, deadline=None)
+@given(cap=st.integers(2, 32), n1=st.integers(1, 40), n2=st.integers(1, 40),
+       batch=st.integers(1, 16), seed=st.integers(0, 100))
+def test_per_sample_only_valid_entries(cap, n1, n2, batch, seed):
+    """The PER analogue of test_replay.test_sample_only_valid_entries:
+    after arbitrary adds (including wraparound) sampling only returns
+    live transitions."""
+    state = replay_init(cap, OBS, prioritized=True)
+    state = replay_add_batch(state, _batch(0, n1))
+    state = replay_add_batch(state, _batch(n1, n2))
+    total = n1 + n2
+    got = per_sample(state, jax.random.PRNGKey(seed), batch, jnp.float32(0.4))
+    valid = set(range(max(0, total - cap), total))
+    for r in np.asarray(got["reward"]).astype(int):
+        assert r in valid
+    assert got["obs"].shape == (batch,) + OBS

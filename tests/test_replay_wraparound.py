@@ -1,14 +1,16 @@
 """Deterministic replay ring-buffer coverage (no hypothesis dependency):
-wraparound flushes larger than the remaining capacity, and the
-n > capacity truncation guard whose scatter used to be order-undefined."""
+wraparound flushes larger than the remaining capacity, the n > capacity
+truncation guard whose scatter used to be order-undefined, and the
+priority-mass bookkeeping of the prioritized buffer across wraparound
+(overwritten slots must lose their old priority mass)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.replay import (replay_add_batch, replay_capacity,
-                               replay_init, replay_sample)
+from repro.core.replay import (per_sample, per_tree, replay_add_batch,
+                               replay_capacity, replay_init, replay_sample)
 
 OBS = (2, 2, 1)
 
@@ -82,3 +84,72 @@ def test_sample_after_overflow_in_range():
     acts = np.asarray(out["action"])
     assert set(acts.tolist()) <= set(range(55, 59))
     assert replay_capacity(state) == 4
+
+
+def test_uniform_sample_masks_unfilled_slots():
+    """size < capacity: the uniform path must only draw the filled
+    prefix [0, size) — the index clamp guards the empty-buffer corner
+    and keeps every draw in range."""
+    state = replay_add_batch(replay_init(64, OBS), _batch(0, 5))
+    out = replay_sample(state, jax.random.PRNGKey(3), 512)
+    acts = np.asarray(out["action"])
+    assert set(acts.tolist()) <= set(range(5)), acts
+    # empty buffer: degenerate but in-range (slot 0), never index >= size
+    empty = replay_init(8, OBS)
+    out = replay_sample(empty, jax.random.PRNGKey(4), 16)
+    assert set(np.asarray(out["action"]).tolist()) == {0}
+
+
+# ---------------------------------------------------------------------------
+# wraparound with priorities
+# ---------------------------------------------------------------------------
+
+def _pstate(cap, fill, priorities):
+    state = replay_add_batch(replay_init(cap, OBS, prioritized=True),
+                             _batch(0, fill))
+    state = dict(state)
+    pri = np.zeros(state["priority"].shape[0], np.float32)
+    pri[:len(priorities)] = priorities
+    state["priority"] = jnp.asarray(pri)
+    return state
+
+
+def test_wraparound_overwrites_priority_mass():
+    """Overwritten slots lose their old priority mass: the new arrivals
+    enter at max_priority and the survivors keep theirs."""
+    state = _pstate(cap=4, fill=4, priorities=[5.0, 7.0, 11.0, 13.0])
+    # cursor is 0 after filling to capacity; 2 new items overwrite 0, 1
+    state = replay_add_batch(state, _batch(100, 2))
+    got = np.asarray(state["priority"])
+    assert got[0] == 1.0 and got[1] == 1.0          # max_priority default
+    assert got[2] == 11.0 and got[3] == 13.0        # survivors untouched
+    # total mass reflects the replacement — stale mass is gone
+    assert float(per_tree(state)[1]) == 1.0 + 1.0 + 11.0 + 13.0
+
+
+def test_overflow_batch_resets_all_priorities():
+    """A flush larger than the buffer replaces every slot's mass."""
+    state = _pstate(cap=4, fill=4, priorities=[5.0, 7.0, 11.0, 13.0])
+    state = replay_add_batch(state, _batch(100, 9))
+    np.testing.assert_array_equal(np.asarray(state["priority"][:4]),
+                                  np.ones(4, np.float32))
+    assert float(per_tree(state)[1]) == 4.0
+
+
+def test_per_sample_respects_overwritten_mass():
+    """After wraparound the overwritten transitions are sampled at the
+    *new* (max-priority) mass, never at the stale one: give the old
+    slots enormous mass, overwrite them, and check the survivors with
+    real mass dominate exactly in proportion."""
+    state = _pstate(cap=8, fill=8,
+                    priorities=[1e6, 1e6, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0])
+    state = replay_add_batch(state, _batch(100, 2))   # overwrite slots 0, 1
+    out = per_sample(state, jax.random.PRNGKey(5), 1024, jnp.float32(0.4))
+    idx = np.asarray(out["index"])
+    freq = np.bincount(idx, minlength=8)[:8] / 1024
+    # every slot now has mass 1.0 -> uniform 1/8 each (2/n stratification
+    # tolerance); with stale mass the first two slots would take ~100%
+    np.testing.assert_allclose(freq, np.full(8, 1 / 8), atol=2 / 1024 + 1e-7)
+    # the overwritten slots return the new transitions, not the old ones
+    taken = np.asarray(out["action"])[np.isin(idx, [0, 1])]
+    assert set(taken.tolist()) <= {100, 101}

@@ -1,0 +1,208 @@
+"""The off-policy variant family (VariantConfig): determinism regression
+plus unit semantics for each component.
+
+The headline test locks in the paper's snapshot-𝒟 guarantee under every
+preset: a jitted concurrent C-cycle is a *pure function* of its carry,
+so two runs from the same carry (and two independently-built cycles with
+the same key) must be bitwise identical — in particular the PER path's
+staged priority updates must not introduce order-dependent scatters.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import DQNConfig, VariantConfig
+from repro.configs.dqn_nature import VARIANTS, NatureCNNConfig, get_variant
+from repro.envs import get_env
+from repro.models.nature_cnn import q_forward, q_init, q_param_spec
+from repro.optim import adamw
+from repro.core.dqn import q_loss_variant
+from repro.core.replay import replay_init
+from repro.core.synchronized import nstep_aggregate, sampler_init
+from repro.core.concurrent import (TrainerCarry, make_concurrent_cycle,
+                                   prepopulate)
+
+FS = 10
+
+
+def _setup(variant: VariantConfig, C=16, W=4):
+    spec = get_env("catch")
+    ncfg = NatureCNNConfig(frame_size=FS, frame_stack=2, convs=((8, 3, 1),),
+                           hidden=16, n_actions=spec.n_actions,
+                           dueling=variant.dueling)
+    dcfg = DQNConfig(minibatch_size=8, replay_capacity=128,
+                     target_update_period=C, train_period=4,
+                     prepopulate=32, n_envs=W, frame_stack=2,
+                     eps_anneal_steps=1000, variant=variant)
+    key = jax.random.PRNGKey(0)
+    params = q_init(ncfg, spec.n_actions, key)
+    qf = lambda p, o: q_forward(p, o, ncfg)
+    opt = adamw(1e-3, weight_decay=0.0)
+    replay = replay_init(dcfg.replay_capacity, (FS, FS, 2),
+                         prioritized=variant.prioritized)
+    sampler = sampler_init(spec, dcfg, key, FS)
+    replay, sampler = prepopulate(spec, qf, dcfg, replay, sampler,
+                                  dcfg.prepopulate, FS)
+    carry = TrainerCarry(params, opt.init(params), replay, sampler,
+                         jnp.int32(0))
+    return spec, dcfg, qf, opt, carry
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("name", sorted(VARIANTS))
+def test_cycle_bitwise_deterministic(name):
+    """Two executions of the jitted cycle from the same carry, and a
+    second independently-jitted cycle, agree bit-for-bit."""
+    variant = get_variant(name)
+    spec, dcfg, qf, opt, carry = _setup(variant)
+    cycle = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg, frame_size=FS))
+    c1, m1 = cycle(carry)
+    c2, m2 = cycle(carry)
+    _assert_trees_equal(c1, c2)
+    _assert_trees_equal(m1, m2)
+    cycle_b = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg,
+                                            frame_size=FS))
+    c3, m3 = cycle_b(carry)
+    _assert_trees_equal(c1, c3)
+    # and a second chained cycle stays deterministic (priority flush,
+    # wraparound, n-step truncation all inside)
+    _assert_trees_equal(cycle(c1)[0], cycle_b(c3)[0])
+
+
+def test_default_variant_matches_legacy_cycle():
+    """VariantConfig() is the identity: the dqn preset reproduces the
+    pre-variant cycle bit-for-bit (same RNG stream, same formulas)."""
+    spec, dcfg, qf, opt, carry = _setup(get_variant("dqn"))
+    got, _ = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg,
+                                           frame_size=FS))(carry)
+    # legacy reference: the exact seed-era formulas, inline
+    from repro.core.dqn import make_update_fn
+    from repro.core.replay import replay_add_batch, replay_sample
+    from repro.core.synchronized import sync_round
+    from repro.optim.schedule import linear_epsilon
+    eps_fn = linear_epsilon(dcfg.eps_start, dcfg.eps_end,
+                            dcfg.eps_anneal_steps)
+    update = make_update_fn(qf, opt, dcfg)          # legacy 3-tuple contract
+    target, snapshot, sampler = carry.params, carry.replay, carry.sampler
+    staged = []
+    for i in range(dcfg.target_update_period // dcfg.n_envs):
+        eps = eps_fn(carry.step + jnp.int32(i * dcfg.n_envs))
+        sampler, tr = sync_round(spec, qf, target, sampler, eps, FS)
+        staged.append(tr)
+    params, opt_state = carry.params, carry.opt_state
+    ktrain = jax.random.fold_in(jax.random.PRNGKey(17), carry.step)
+    for k in jax.random.split(ktrain, dcfg.target_update_period
+                              // dcfg.train_period):
+        batch = replay_sample(snapshot, k, dcfg.minibatch_size)
+        params, opt_state, _ = update(params, target, opt_state, batch)
+    flat = {key: jnp.concatenate([t[key] for t in staged], axis=0)
+            for key in staged[0]}
+    replay = replay_add_batch(carry.replay, flat)
+    for g, w in zip(jax.tree_util.tree_leaves(got.params),
+                    jax.tree_util.tree_leaves(params)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=1e-6, rtol=1e-6)
+    for g, w in zip(jax.tree_util.tree_leaves(got.replay),
+                    jax.tree_util.tree_leaves(replay)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# component semantics
+# ---------------------------------------------------------------------------
+
+def test_nstep_aggregate_rewards_and_termination():
+    R, W, n, g = 5, 1, 3, 0.9
+    reward = jnp.asarray([[1.], [2.], [4.], [8.], [16.]], jnp.float32)
+    done = jnp.asarray([[False], [True], [False], [False], [False]])
+    staged = {
+        "obs": jnp.arange(R, dtype=jnp.uint8)[:, None, None],
+        "action": jnp.arange(R, dtype=jnp.int32)[:, None],
+        "reward": reward, "done": done,
+        "next_obs": (10 + jnp.arange(R, dtype=jnp.uint8))[:, None, None],
+    }
+    out = nstep_aggregate(staged, n, g)
+    assert out["reward"].shape == (R - n + 1, W)
+    # t=0: r0 + g*r1, truncated at the terminal (r2 excluded)
+    np.testing.assert_allclose(np.asarray(out["reward"][:, 0]),
+                               [1 + g * 2, 2, 4 + g * 8 + g * g * 16],
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(out["done"][:, 0]),
+                                  [True, True, False])
+    # start fields come from t, next_obs from t+n-1
+    np.testing.assert_array_equal(np.asarray(out["obs"][:, 0, 0]), [0, 1, 2])
+    np.testing.assert_array_equal(np.asarray(out["next_obs"][:, 0, 0]),
+                                  [12, 13, 14])
+    # n=1 is the identity
+    assert nstep_aggregate(staged, 1, g) is staged
+
+
+def test_double_changes_bootstrap_but_not_argmax_selection():
+    """Double DQN bootstraps Q_target at the *online* argmax: craft a
+    case where online and target nets disagree on the best action."""
+    B, A = 4, 3
+    batch = {
+        "obs": jnp.zeros((B, 2), jnp.float32),
+        "next_obs": jnp.ones((B, 2), jnp.float32),
+        "action": jnp.zeros((B,), jnp.int32),
+        "reward": jnp.zeros((B,), jnp.float32),
+        "done": jnp.zeros((B,), jnp.bool_),
+    }
+    # params = the Q table rows keyed on obs content
+    online = jnp.asarray([[0., 0., 1.]])        # online argmax = 2
+    target = jnp.asarray([[5., 9., 7.]])        # target max = 9, at a*: 7
+    qf = lambda p, o: jnp.broadcast_to(p, (o.shape[0], A))
+
+    def y_of(variant, p):
+        _, td = q_loss_variant(p, target, batch, qf, 1.0, variant)
+        return np.asarray(td)                    # |y - Q(s,a)| with Q = p[0]
+
+    td_single = y_of(VariantConfig(), online)
+    td_double = y_of(VariantConfig(double=True), online)
+    np.testing.assert_allclose(td_single, np.full(B, 9.0), rtol=1e-6)
+    np.testing.assert_allclose(td_double, np.full(B, 7.0), rtol=1e-6)
+
+
+def test_dueling_head_parametrization():
+    spec = q_param_spec(NatureCNNConfig(frame_size=10, frame_stack=2,
+                                        convs=((8, 3, 1),), hidden=16,
+                                        dueling=True), 4)
+    assert {"val_w", "val_b", "adv_w", "adv_b"} <= set(spec)
+    assert "out_w" not in spec
+    ncfg = NatureCNNConfig(frame_size=10, frame_stack=2, convs=((8, 3, 1),),
+                           hidden=16, dueling=True)
+    params = q_init(ncfg, 4, jax.random.PRNGKey(0))
+    q = q_forward(params, jnp.zeros((2, 10, 10, 2), jnp.uint8), ncfg)
+    assert q.shape == (2, 4)
+
+
+def test_presets_compose_as_documented():
+    assert VARIANTS["dqn"] == VariantConfig(name="dqn")
+    assert VARIANTS["rainbow_lite"].double
+    assert VARIANTS["rainbow_lite"].dueling
+    assert VARIANTS["rainbow_lite"].prioritized
+    assert VARIANTS["rainbow_lite"].n_step == 3
+    for v in VARIANTS.values():
+        v.validate()
+    with pytest.raises(KeyError):
+        get_variant("nope")
+
+
+# ---------------------------------------------------------------------------
+# tier-2: one short rl_train cycle per preset (the CI variant smoke job)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(VARIANTS))
+def test_variant_smoke_rl_train(name, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "ref")
+    from repro.launch import rl_train
+    assert rl_train.main(["--variant", name, "--dryrun"]) == 0
