@@ -1,0 +1,71 @@
+"""C51 hot-path microbenchmark: the categorical Bellman projection
+across batch sizes and the backends runnable on this host (ref always;
+interpret when requested — it is orders of magnitude slower and only
+validates kernel logic).
+
+  PYTHONPATH=src python -m benchmarks.c51_projection [--interpret]
+
+Reports us/call for one jitted projection at the full-Rainbow atom
+count, i.e. the per-update overhead C51 adds on top of the scalar TD
+target; numbers are recorded in docs/kernel_backends.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+K = 51
+V_MIN, V_MAX = -10.0, 10.0
+GAMMA_N = 0.99 ** 3
+
+
+def _case(batch: int):
+    kp, kr, kd = jax.random.split(jax.random.PRNGKey(batch), 3)
+    probs = jax.nn.softmax(jax.random.normal(kp, (batch, K)), axis=-1)
+    rewards = 3.0 * jax.random.normal(kr, (batch,))
+    dones = (jax.random.uniform(kd, (batch,)) < 0.3).astype(jnp.float32)
+    return probs, rewards, dones
+
+
+def _time(fn, *args, iters: int = 100) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def main(argv=None) -> List[Dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--interpret", action="store_true",
+                    help="also time the Pallas interpreter (very slow)")
+    ap.add_argument("--batches", default="32,256,2048")
+    args = ap.parse_args(argv)
+
+    backends = ["ref"] + (["interpret"] if args.interpret else [])
+    rows = []
+    for batch in (int(b) for b in args.batches.split(",")):
+        probs, rewards, dones = _case(batch)
+        for b in backends:
+            fn = jax.jit(lambda p, r, d, _b=b: ops.categorical_projection(
+                p, r, d, V_MIN, V_MAX, GAMMA_N, backend=_b))
+            us = _time(fn, probs, rewards, dones,
+                       iters=100 if b == "ref" else 2)
+            rows.append({"batch": batch, "atoms": K, "backend": b,
+                         "us_per_call": us})
+            print(f"B={batch:5d} K={K} proj[{b:9s}]  {us:9.1f} us",
+                  flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

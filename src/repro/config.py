@@ -8,6 +8,12 @@ via ``--arch <id>`` in every launcher.
 Layer stacks are described as *superblocks* — a tuple of block kinds that
 is repeated ``n_superblocks`` times and executed with ``lax.scan`` over the
 repeats, so the lowered HLO size is independent of depth.
+
+This module is the public configuration surface: import the dataclasses
+below from ``repro.config`` (``ExecConfig`` is also re-exported from
+``repro.models.layers`` for the historical path). The DQN variant
+family (``VariantConfig``) is documented field-by-field in
+docs/variants.md.
 """
 
 from __future__ import annotations
@@ -16,6 +22,14 @@ import dataclasses
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
+
+__all__ = [
+    "ExecConfig", "DEFAULT_EXEC", "MoEConfig", "SSMConfig", "XLSTMConfig",
+    "ModelConfig", "ShapeConfig", "INPUT_SHAPES", "TrainConfig",
+    "VariantConfig", "DQNConfig", "MeshConfig",
+    "ATTN", "CROSS_ATTN", "MAMBA2", "MLSTM", "SLSTM", "BLOCK_KINDS",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+]
 
 @dataclasses.dataclass(frozen=True)
 class ExecConfig:
@@ -260,25 +274,55 @@ class VariantConfig:
     large number of off-policy deep reinforcement learning methods";
     this config is that family: double Q-learning (van Hasselt et al.
     2016), dueling heads (Wang et al. 2016), proportional prioritized
-    replay (Schaul et al. 2016) and n-step returns (Sutton 1988), each
-    independently toggleable and all composable (``rainbow_lite``).
-    Defaults reproduce vanilla uniform-replay DQN exactly.
+    replay (Schaul et al. 2016), n-step returns (Sutton 1988), C51
+    distributional value learning (Bellemare et al. 2017) and NoisyNet
+    exploration (Fortunato et al. 2018) — each independently toggleable
+    and all composable; ``rainbow`` composes all six (Hessel et al.
+    2018). Defaults reproduce vanilla uniform-replay DQN exactly.
+    Field semantics and per-preset values are tabulated in
+    docs/variants.md (the authoritative variant matrix).
     """
 
     name: str = "dqn"
-    double: bool = False          # bootstrap from argmax of the online net
-    dueling: bool = False         # V + (A - mean A) head split
-    prioritized: bool = False     # proportional PER via the segment tree
-    n_step: int = 1               # n-step return accumulation in the sampler
+    # double: bootstrap Q_θ⁻(s', argmax_a Q_θ(s', a)) instead of
+    # max_a Q_θ⁻(s', a)
+    double: bool = False
+    # dueling: V + (A - mean A) head split in the Nature CNN
+    dueling: bool = False
+    # prioritized: proportional PER sampled through the segment_tree op;
+    # priorities stage during the cycle, flush at the θ⁻ ← θ sync point
+    prioritized: bool = False
+    # n_step: n-step return accumulation on the staging buffer; the loss
+    # bootstraps with γⁿ
+    n_step: int = 1
     per_alpha: float = 0.6        # priority exponent (Schaul et al. Table 3)
     per_beta0: float = 0.4        # initial IS-correction exponent
     per_beta_anneal_steps: int = 1_000_000   # beta -> 1 over this horizon
     per_eps: float = 1e-3         # additive mass so td=0 stays sampleable
+    # distributional: C51 categorical value head (num_atoms × actions
+    # logits), cross-entropy loss against the categorical_projection of
+    # the target distribution; PER priorities come from the per-sample
+    # cross-entropy (the KL term + a θ-independent entropy offset)
+    distributional: bool = False
+    num_atoms: int = 51           # K: support resolution (51 = "C51")
+    v_min: float = -10.0          # support lower edge z_0
+    v_max: float = 10.0           # support upper edge z_{K-1}
+    # noisy: factorized-Gaussian NoisyNet linear layers in place of the
+    # post-conv linears; ε-greedy is disabled (ε=0) and exploration
+    # comes from per-cycle noise resampled off the cycle RNG, keeping
+    # the bitwise-determinism guarantee
+    noisy: bool = False
+    noisy_sigma0: float = 0.5     # σ-parameter init scale σ0/√fan_in
 
     def validate(self) -> None:
         assert self.n_step >= 1, self.n_step
         assert 0.0 <= self.per_alpha <= 1.0, self.per_alpha
         assert 0.0 <= self.per_beta0 <= 1.0, self.per_beta0
+        assert self.num_atoms >= 1, self.num_atoms
+        assert self.v_max >= self.v_min, (self.v_min, self.v_max)
+        if self.distributional:
+            assert self.num_atoms >= 2, "C51 needs a non-degenerate support"
+        assert self.noisy_sigma0 >= 0.0, self.noisy_sigma0
 
 
 @dataclasses.dataclass(frozen=True)

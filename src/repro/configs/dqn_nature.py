@@ -2,7 +2,7 @@
 (Mnih et al. 2015), consuming 84x84x4 stacked grayscale frames, plus the
 off-policy variant presets selectable via ``--variant`` in the RL
 launchers (the paper's "generalizable to a large number of off-policy
-methods" claim, made concrete).
+methods" claim, made concrete — see docs/variants.md for the matrix).
 
 Not part of the assigned-architecture pool; used by the DQN reproduction
 (core/, envs/, benchmarks/table1_speed.py).
@@ -23,23 +23,51 @@ class NatureCNNConfig:
     hidden: int = 512
     n_actions: int = 18  # full ALE action set upper bound
     dueling: bool = False  # V + (A - mean A) head split (Wang et al. 2016)
+    # C51 distributional head (Bellemare et al. 2017): >1 sizes every
+    # head by num_atoms × actions over the [v_min, v_max] support;
+    # 1 keeps the scalar-Q seed network bit-for-bit.
+    num_atoms: int = 1
+    v_min: float = -10.0
+    v_max: float = 10.0
+    # NoisyNet linears (Fortunato et al. 2018) in place of the post-conv
+    # affine layers; σ parameters initialized to noisy_sigma0/√fan_in.
+    noisy: bool = False
+    noisy_sigma0: float = 0.5
 
 
 CONFIG = NatureCNNConfig()
 
 
+def cnn_config_for(variant: VariantConfig, base: NatureCNNConfig = CONFIG,
+                   **overrides) -> NatureCNNConfig:
+    """The NatureCNNConfig a variant preset implies: dueling/noisy head
+    selection and the C51 atom grid all derive from the VariantConfig so
+    launchers and tests cannot drift apart."""
+    return dataclasses.replace(
+        base, dueling=variant.dueling, noisy=variant.noisy,
+        noisy_sigma0=variant.noisy_sigma0,
+        num_atoms=variant.num_atoms if variant.distributional else 1,
+        v_min=variant.v_min, v_max=variant.v_max, **overrides)
+
+
 # ---------------------------------------------------------------------------
-# Variant presets: name -> VariantConfig. ``rainbow_lite`` composes every
-# toggle (the distributional/noisy components of full Rainbow are out of
-# scope); see the README variant matrix for what each changes.
+# Variant presets: name -> VariantConfig. ``rainbow`` composes every
+# toggle (full Rainbow, Hessel et al. 2018); ``rainbow_lite`` is the
+# pre-C51/noisy composition kept for continuity. docs/variants.md holds
+# the full per-preset hyperparameter matrix.
 # ---------------------------------------------------------------------------
 VARIANTS = {
     "dqn": VariantConfig(name="dqn"),
     "double": VariantConfig(name="double", double=True),
     "dueling": VariantConfig(name="dueling", dueling=True),
     "per": VariantConfig(name="per", prioritized=True),
+    "c51": VariantConfig(name="c51", distributional=True),
+    "noisy": VariantConfig(name="noisy", noisy=True),
     "rainbow_lite": VariantConfig(name="rainbow_lite", double=True,
                                   dueling=True, prioritized=True, n_step=3),
+    "rainbow": VariantConfig(name="rainbow", double=True, dueling=True,
+                             prioritized=True, n_step=3, distributional=True,
+                             noisy=True),
 }
 
 

@@ -55,6 +55,15 @@ class ALConfig:
     prioritized: bool = False
     per_alpha: float = 0.6
     per_eps: float = 1e-3
+    # distributional advantage targets — the LLM-path reuse of the C51
+    # categorical_projection op: advantages are two-hot projected onto a
+    # fixed [adv_v_min, adv_v_max] support and the learner consumes the
+    # projection's expectation, i.e. a support-clipped advantage that is
+    # robust to reward-model outliers (MuZero-style two-hot targets)
+    distributional_adv: bool = False
+    adv_atoms: int = 33
+    adv_v_min: float = -1.0
+    adv_v_max: float = 1.0
 
 
 def synthetic_reward(tokens: jax.Array, prompt_len: int, modulus: int,

@@ -25,8 +25,14 @@ structure. Under PER the trainer samples from the snapshot's sum-tree
 like the sampler stages experiences; both flush at the next sync point
 (priorities first, then the staged transitions, whose slots enter at
 max priority). n-step aggregation happens on the staging buffer before
-the flush. Every variant therefore keeps the paper's snapshot-𝒟
-determinism guarantee — locked in by tests/test_variants.py.
+the flush. NoisyNet exploration replaces the ε-greedy schedule (ε=0)
+with parameter noise resampled once per cycle for the actor and once
+per update for the trainer — every key is folded out of the carry's
+step counter, so the cycle stays a pure function of its carry. C51
+losses ride the same PER staging with cross-entropy in place of |td|.
+Every variant therefore keeps the paper's snapshot-𝒟 determinism
+guarantee — locked in by tests/test_variants.py. docs/architecture.md
+has the cycle timeline.
 """
 
 from __future__ import annotations
@@ -57,9 +63,13 @@ class TrainerCarry(NamedTuple):
 def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
                           cfg: DQNConfig, frame_size: int = 84,
                           cycle_steps: int = 0,
-                          kernel_backend: Optional[str] = None) -> Callable:
+                          kernel_backend: Optional[str] = None,
+                          q_logits: Optional[Callable] = None) -> Callable:
     """Build the jitted C-cycle. ``cycle_steps`` overrides C for tests;
-    ``kernel_backend`` is the segment-tree kernel request (PER only).
+    ``kernel_backend`` is the kernel request for the PER segment tree
+    and the C51 projection op; ``q_logits`` is the (B, A, K) categorical
+    head required by distributional variants. NoisyNet variants expect
+    ``q_forward``/``q_logits`` to accept a trailing noise key.
     Returns cycle(carry) -> (carry', metrics)."""
     C = cycle_steps or cfg.target_update_period
     W = cfg.n_envs
@@ -69,7 +79,9 @@ def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
     variant = cfg.variant
     variant.validate()
     assert rounds >= variant.n_step, (rounds, variant.n_step)
-    update_fn = make_update_fn(q_forward, opt, cfg, variant)
+    update_fn = make_update_fn(q_forward, opt, cfg, variant,
+                               q_logits=q_logits,
+                               kernel_backend=kernel_backend)
     eps_fn = linear_epsilon(cfg.eps_start, cfg.eps_end, cfg.eps_anneal_steps)
 
     def cycle(carry: TrainerCarry) -> Tuple[TrainerCarry, Dict[str, jax.Array]]:
@@ -78,9 +90,19 @@ def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
         replay_snapshot = carry.replay
 
         # --- sampler: C/W synchronized rounds from θ⁻ ------------------
+        # NoisyNet: ε-greedy is disabled; exploration is the cycle's
+        # parameter-noise draw, frozen with θ⁻ for all C/W rounds (the
+        # key is a pure function of carry.step — determinism preserved).
+        if variant.noisy:
+            k_act = jax.random.fold_in(jax.random.PRNGKey(23), carry.step)
+            qf_act = lambda p, o: q_forward(p, o, k_act)  # noqa: E731
+        else:
+            qf_act = q_forward
+
         def sample_body(s, i):
-            eps = eps_fn(carry.step + i * W)
-            s, tr = sync_round(spec, q_forward, target_params, s, eps,
+            eps = (jnp.float32(0.0) if variant.noisy
+                   else eps_fn(carry.step + i * W))
+            s, tr = sync_round(spec, qf_act, target_params, s, eps,
                                frame_size)
             return s, tr
 
@@ -90,6 +112,14 @@ def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
 
         # --- trainer: C/F updates on θ from the frozen snapshot --------
         ktrain = jax.random.fold_in(jax.random.PRNGKey(17), carry.step)
+
+        def split_update_key(k):
+            """Sampling key + (noisy only) per-update noise key. Non-
+            noisy variants keep the seed-era single-key stream."""
+            if variant.noisy:
+                ks, kn = jax.random.split(k)
+                return ks, kn
+            return k, None
 
         if variant.prioritized:
             # The snapshot's sampling distribution: one tree build at the
@@ -102,10 +132,11 @@ def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
 
             def train_body(tc, k):
                 params, opt_state, pending = tc
-                batch = per_sample(replay_snapshot, k, cfg.minibatch_size,
+                ks, kn = split_update_key(k)
+                batch = per_sample(replay_snapshot, ks, cfg.minibatch_size,
                                    beta, tree=tree, backend=kernel_backend)
                 params, opt_state, loss, td_abs = update_fn(
-                    params, target_params, opt_state, batch)
+                    params, target_params, opt_state, batch, kn)
                 pending = per_stage_priorities(pending, batch["index"],
                                                td_abs, variant.per_alpha,
                                                variant.per_eps)
@@ -118,9 +149,10 @@ def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
         else:
             def train_body(tc, k):
                 params, opt_state = tc
-                batch = replay_sample(replay_snapshot, k, cfg.minibatch_size)
+                ks, kn = split_update_key(k)
+                batch = replay_sample(replay_snapshot, ks, cfg.minibatch_size)
                 params, opt_state, loss, _ = update_fn(params, target_params,
-                                                       opt_state, batch)
+                                                       opt_state, batch, kn)
                 return (params, opt_state), loss
 
             (params, opt_state), losses = jax.lax.scan(
@@ -140,7 +172,8 @@ def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
             "loss": jnp.mean(losses),
             "reward": jnp.sum(staged["reward"]),
             "episodes": jnp.sum(staged["done"]),
-            "eps": eps_fn(carry.step),
+            "eps": (jnp.float32(0.0) if variant.noisy
+                    else eps_fn(carry.step)),
         }
         new = TrainerCarry(params, opt_state, replay, sampler,
                            carry.step + C)

@@ -31,6 +31,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.config import ModelConfig
 from repro.core.actor_learner import ALConfig, synthetic_reward
 from repro.core.replay import stratified_indices
+from repro.kernels import ops as kops
 from repro.kernels.segment_tree import next_pow2, tree_build
 from repro.models import transformer as T
 from repro.models.layers import ExecConfig, softmax_cross_entropy
@@ -81,6 +82,23 @@ class DisaggregatedActorLearner:
             return seqs, rewards - jnp.mean(rewards), jnp.mean(rewards)
 
         def learner_fn(params, opt_state, seqs, advantages, size, key):
+            if al.distributional_adv:
+                # Two-hot distributional advantage targets: project each
+                # scalar advantage (a point mass at the mid-support atom,
+                # shifted by the advantage as the "reward") onto the
+                # fixed support via the C51 projection op, then consume
+                # the expectation — a smooth clip of the advantage into
+                # [adv_v_min, adv_v_max]. Same op, same backends as the
+                # DQN C51 path.
+                z = kops.support(al.adv_atoms, al.adv_v_min, al.adv_v_max)
+                mid = jnp.zeros((advantages.shape[0], al.adv_atoms),
+                                jnp.float32).at[:, al.adv_atoms // 2].set(1.0)
+                m = kops.categorical_projection(
+                    mid, advantages - z[al.adv_atoms // 2],
+                    jnp.zeros_like(advantages), al.adv_v_min, al.adv_v_max,
+                    1.0)
+                advantages = jnp.sum(m * z, axis=-1)
+
             def loss_fn(p, s, a):
                 logits, aux = T.forward(cfg, ec, p, s[:, :-1])
                 pos = jnp.arange(L - 1)[None, :]

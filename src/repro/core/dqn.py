@@ -7,11 +7,14 @@ execution framework alone).
 The off-policy variant family (``VariantConfig``) plugs in here: double
 Q-learning swaps the bootstrap argmax to the online network, n-step
 returns raise the bootstrap discount to γⁿ (rewards are pre-aggregated
-by the sampler, see ``synchronized.nstep_aggregate``), and prioritized
+by the sampler, see ``synchronized.nstep_aggregate``), prioritized
 replay threads per-sample importance-sampling weights into the Huber
 mean and reads the per-sample TD errors back out for the priority
-update. With the default variant every formula below reduces to the
-vanilla path bit-for-bit.
+update, C51 swaps the Huber regression for a categorical cross-entropy
+against the projected target distribution (the ``categorical_projection``
+op), and NoisyNet threads per-call noise keys into the network.  With
+the default variant every formula below reduces to the vanilla path
+bit-for-bit.
 """
 
 from __future__ import annotations
@@ -22,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import DQNConfig, VariantConfig
+from repro.kernels import ops as kops
 
 
 def q_loss(params, target_params, batch: Dict[str, jax.Array],
@@ -33,9 +37,19 @@ def q_loss(params, target_params, batch: Dict[str, jax.Array],
     return loss
 
 
+def _with_noise(q_forward: Callable, noise_key: Optional[jax.Array]):
+    """Adapt the 2-arg q_forward convention to per-call noise: call site
+    i gets an independent key (online/target/online-next noise must be
+    independent draws, Fortunato et al. 2018 §4)."""
+    if noise_key is None:
+        return lambda p, o, i: q_forward(p, o)
+    return lambda p, o, i: q_forward(p, o, jax.random.fold_in(noise_key, i))
+
+
 def q_loss_variant(params, target_params, batch: Dict[str, jax.Array],
                    q_forward: Callable, discount: float,
-                   variant: VariantConfig):
+                   variant: VariantConfig,
+                   noise_key: Optional[jax.Array] = None):
     """Variant-aware Eq. (1). Returns (scalar loss, per-sample |td|).
 
     * double: a* = argmax_a Q_θ(s', a); bootstrap = Q_θ⁻(s', a*)
@@ -44,13 +58,16 @@ def q_loss_variant(params, target_params, batch: Dict[str, jax.Array],
       the bootstrap discount is γⁿ and ``done`` means "episode ended
       within the window";
     * prioritized: ``batch['weight']`` scales each sample's Huber term
-      (the IS correction); absent, the mean is unweighted.
+      (the IS correction); absent, the mean is unweighted;
+    * noisy: ``noise_key`` (None = μ-only) is split per forward call, so
+      online, target and online-next evaluations see independent noise.
     """
-    q = q_forward(params, batch["obs"])                          # (B, A)
+    qf = _with_noise(q_forward, noise_key)
+    q = qf(params, batch["obs"], 0)                              # (B, A)
     qa = jnp.take_along_axis(q, batch["action"][:, None], axis=1)[:, 0]
-    q_next = q_forward(target_params, batch["next_obs"])
+    q_next = qf(target_params, batch["next_obs"], 1)
     if variant.double:
-        q_next_online = q_forward(params, batch["next_obs"])
+        q_next_online = qf(params, batch["next_obs"], 2)
         a_star = jnp.argmax(q_next_online, axis=-1)
         bootstrap = jnp.take_along_axis(q_next, a_star[:, None], axis=1)[:, 0]
     else:
@@ -66,6 +83,53 @@ def q_loss_variant(params, target_params, batch: Dict[str, jax.Array],
     return loss, jax.lax.stop_gradient(jnp.abs(td))
 
 
+def c51_loss_variant(params, target_params, batch: Dict[str, jax.Array],
+                     q_logits: Callable, discount: float,
+                     variant: VariantConfig,
+                     noise_key: Optional[jax.Array] = None,
+                     kernel_backend: Optional[str] = None):
+    """Distributional (C51) cross-entropy loss (Bellemare et al. 2017).
+
+    The target distribution is the ``categorical_projection`` of the
+    θ⁻ next-state distribution under the γⁿ-shifted support (n-step
+    rewards arrive pre-aggregated, exactly like the scalar path). With
+    ``variant.double`` the next-state action is the argmax of the
+    *online* expectation. Returns (scalar loss, per-sample
+    cross-entropy): the CE doubles as the PER priority signal — it is
+    KL(m ‖ p_θ) plus H(m), where H(m) is θ-independent but *per-sample*
+    (it depends on each transition's projected target), so CE-ranked
+    priorities can differ from KL-ranked ones; CE is the standard
+    Rainbow choice because it is the quantity the loss minimizes.
+    """
+    z = kops.support(variant.num_atoms, variant.v_min, variant.v_max)
+    qf = _with_noise(q_logits, noise_key)
+    logits = qf(params, batch["obs"], 0)                         # (B, A, K)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    logp_a = jnp.take_along_axis(
+        logp, batch["action"][:, None, None], axis=1)[:, 0]      # (B, K)
+    tgt_logits = qf(target_params, batch["next_obs"], 1)
+    tgt_probs = jax.nn.softmax(tgt_logits, axis=-1)              # (B, A, K)
+    if variant.double:
+        online_next = qf(params, batch["next_obs"], 2)
+        q_next = jnp.sum(jax.nn.softmax(online_next, axis=-1) * z, axis=-1)
+    else:
+        q_next = jnp.sum(tgt_probs * z, axis=-1)                 # (B, A)
+    a_star = jnp.argmax(q_next, axis=-1)
+    p_t = jnp.take_along_axis(tgt_probs, a_star[:, None, None],
+                              axis=1)[:, 0]                      # (B, K)
+    disc_n = discount ** variant.n_step
+    m = kops.categorical_projection(
+        jax.lax.stop_gradient(p_t), batch["reward"],
+        batch["done"].astype(jnp.float32), variant.v_min, variant.v_max,
+        disc_n, backend=kernel_backend)
+    ce = -jnp.sum(jax.lax.stop_gradient(m) * logp_a, axis=-1)    # (B,)
+    if "weight" in batch:
+        loss = jnp.mean(batch["weight"] * ce)
+    else:
+        loss = jnp.mean(ce)
+    return loss, jax.lax.stop_gradient(ce)
+
+
 def egreedy(q_values: jax.Array, eps: jax.Array, key: jax.Array) -> jax.Array:
     """q_values: (W, A) -> actions (W,). One key per call; per-stream
     randomness derived inside."""
@@ -78,7 +142,9 @@ def egreedy(q_values: jax.Array, eps: jax.Array, key: jax.Array) -> jax.Array:
 
 
 def make_update_fn(q_forward: Callable, opt, cfg: DQNConfig,
-                   variant: Optional[VariantConfig] = None):
+                   variant: Optional[VariantConfig] = None,
+                   q_logits: Optional[Callable] = None,
+                   kernel_backend: Optional[str] = None):
     """One minibatch gradient step.
 
     The loss follows ``cfg.variant`` (callers may override with an
@@ -93,19 +159,34 @@ def make_update_fn(q_forward: Callable, opt, cfg: DQNConfig,
     ``variant=None`` (the legacy contract, used by the baseline and the
     host runner): (params, target, opt_state, batch) ->
     (params', opt_state', loss). With an explicit ``VariantConfig`` the
-    update additionally returns the per-sample |td| for the PER
-    priority staging: -> (params', opt_state', loss, td_abs)."""
+    update additionally returns the per-sample priority signal (|td|,
+    or the C51 cross-entropy) for the PER staging, and accepts an
+    optional trailing ``noise_key`` (NoisyNet variants):
+    -> (params', opt_state', loss, td_abs). Distributional variants
+    require ``q_logits`` (the (B, A, K) head); ``kernel_backend`` is
+    the projection-op request."""
     import dataclasses
 
     from repro.optim.base import apply_updates
 
     v = variant if variant is not None else dataclasses.replace(
         cfg.variant, n_step=1)
+    if v.distributional:
+        assert q_logits is not None, \
+            "distributional variants need the q_logits callable"
 
-    def update(params, target_params, opt_state, batch):
-        (loss, td_abs), grads = jax.value_and_grad(
-            q_loss_variant, has_aux=True)(
-            params, target_params, batch, q_forward, cfg.discount, v)
+        def loss_fn(params, target_params, batch, noise_key):
+            return c51_loss_variant(params, target_params, batch, q_logits,
+                                    cfg.discount, v, noise_key,
+                                    kernel_backend)
+    else:
+        def loss_fn(params, target_params, batch, noise_key):
+            return q_loss_variant(params, target_params, batch, q_forward,
+                                  cfg.discount, v, noise_key)
+
+    def update(params, target_params, opt_state, batch, noise_key=None):
+        (loss, td_abs), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, target_params, batch, noise_key)
         updates, opt_state = opt.update(grads, opt_state, params)
         new_params = apply_updates(params, updates)
         if variant is None:

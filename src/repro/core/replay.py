@@ -22,6 +22,10 @@ one slot is sampled by several minibatches.
 Transitions are stored as full (obs, action, reward, next_obs, done)
 records. Storage dtype for observations is uint8 (the paper's 1-byte
 pixel economy).
+
+This module is the public replay API (the concurrent cycle, the
+baselines and the disaggregated learner all import from here); the
+staging/flush timeline is diagrammed in docs/architecture.md.
 """
 
 from __future__ import annotations
@@ -33,6 +37,13 @@ import jax.numpy as jnp
 
 from repro.kernels import ops as kops
 from repro.kernels.segment_tree import next_pow2, tree_build
+
+__all__ = [
+    "ReplayState", "FIELDS", "replay_init", "replay_capacity",
+    "replay_size", "replay_is_prioritized", "replay_add_batch",
+    "replay_sample", "per_tree", "stratified_indices", "per_sample",
+    "per_stage_priorities", "per_flush_priorities",
+]
 
 ReplayState = Dict[str, jax.Array]
 

@@ -3,7 +3,9 @@
 The paper's premise is commodity hardware: the same model code must run
 on a TPU pod, a single GTX-class GPU, or a laptop CPU.  Each custom op
 (`flash_attention`, `decode_attention`, `rmsnorm`, `ssm_scan`,
-`slstm_scan`) therefore has up to four executable backends:
+`slstm_scan`, `segment_tree`, `categorical_projection`) therefore has
+up to four executable backends (see docs/kernel_backends.md for the
+registry contract and a how-to for authoring the next op):
 
   ==========  ============================================================
   backend     what runs
@@ -50,7 +52,7 @@ REQUESTS = (AUTO, PALLAS) + CONCRETE_BACKENDS
 ENV_VAR = "REPRO_KERNEL_BACKEND"
 
 OPS = ("flash_attention", "decode_attention", "rmsnorm", "ssm_scan",
-       "slstm_scan", "segment_tree")
+       "slstm_scan", "segment_tree", "categorical_projection")
 
 _REGISTRY: Dict[str, Dict[str, Callable]] = {}
 

@@ -17,6 +17,11 @@ Responsibilities:
     than stored attention matrices;
   * the legacy ``interpret`` flag is kept as a shorthand for
     ``backend='interpret'`` so existing call sites / tests keep working.
+
+This module is the public import surface for kernel consumers (models,
+core, benchmarks): import ops from here, never the per-kernel modules
+(importing *this* module is what populates the backend registry). See
+docs/kernel_backends.md for the authoring how-to.
 """
 
 from __future__ import annotations
@@ -30,13 +35,23 @@ import jax.numpy as jnp
 from repro.kernels import backend as kb
 from repro.kernels import ref
 # importing the kernel modules populates the backend registry
-from repro.kernels import (decode_attention as _decode_mod,  # noqa: F401
+from repro.kernels import (categorical_projection as _catproj_mod,  # noqa: F401
+                           decode_attention as _decode_mod,
                            flash_attention as _flash_mod,
                            rmsnorm as _rms_mod,
                            segment_tree as _segtree_mod,
                            slstm_scan as _slstm_mod,
                            ssm_scan as _ssm_mod)
+from repro.kernels.categorical_projection import support  # noqa: F401
 from repro.kernels.segment_tree import next_pow2, tree_build  # noqa: F401
+
+__all__ = [
+    # dispatched custom ops
+    "flash_attention", "decode_attention", "ssm_scan", "slstm_scan",
+    "segment_tree_sample", "categorical_projection", "rmsnorm",
+    # pure-XLA helpers shared by every backend
+    "tree_build", "next_pow2", "support",
+]
 
 
 def _choose(op: str, interpret: bool, backend: Optional[str]) -> str:
@@ -192,6 +207,27 @@ def segment_tree_sample(tree, targets, interpret: bool = False,
     if b == kb.REF:
         return ref.segment_tree_sample(tree, targets)
     return kb.lookup("segment_tree", b)(tree, targets)
+
+
+# ---------------------------------------------------------------------------
+# categorical (C51) Bellman projection (distributional target; nondiff —
+# consumed under stop_gradient, like the loss target it produces)
+# ---------------------------------------------------------------------------
+
+def categorical_projection(probs, rewards, dones, v_min: float, v_max: float,
+                           gamma_n: float, interpret: bool = False,
+                           backend: Optional[str] = None):
+    """probs: (B, K) masses over the z_j = v_min + jΔ support; rewards:
+    (B,); dones: (B,) bool/float. Projects the Bellman-shifted support
+    clip(r + γⁿ(1-done)·z, v_min, v_max) back onto the fixed atoms.
+    Returns (B, K) f32; rows preserve total mass."""
+    b = _choose("categorical_projection", interpret, backend)
+    d32 = dones.astype(jnp.float32)
+    if b == kb.REF:
+        return ref.categorical_projection(probs, rewards, d32, v_min=v_min,
+                                          v_max=v_max, gamma_n=gamma_n)
+    return kb.lookup("categorical_projection", b)(
+        probs, rewards, d32, v_min=v_min, v_max=v_max, gamma_n=gamma_n)
 
 
 # ---------------------------------------------------------------------------

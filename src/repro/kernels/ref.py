@@ -11,6 +11,7 @@ Layouts (kernel-native):
   rmsnorm: x (..., D), gamma (D,)
   slstm_scan: wx (B, S, 4d), R (4, H, Pd, Pd), b (4d,), state 4x(B, d)
   segment_tree_sample: tree (2P,) sum-tree, targets (n,) -> (n,) int32
+  categorical_projection: probs (B, K), rewards/dones (B,) -> (B, K)
 """
 
 from __future__ import annotations
@@ -112,6 +113,43 @@ def segment_tree_sample(tree, targets):
 
     idx, _ = jax.lax.fori_loop(0, depth, body, (idx, t))
     return idx - P
+
+
+def categorical_projection(probs, rewards, dones, *, v_min: float,
+                           v_max: float, gamma_n: float):
+    """Classic per-atom clamp/scatter C51 projection (Bellemare et al.
+    2017, Alg. 1).
+
+    ``probs``: (B, K) categorical masses over the fixed support
+    z_j = v_min + jΔ; ``rewards``/``dones``: (B,) f32. The Bellman
+    update moves atom j to Tz_j = clip(r + γⁿ(1-done)·z_j, v_min, v_max);
+    its mass splits between the bracketing target atoms l = ⌊b⌋ and
+    l+1 (b = (Tz_j - v_min)/Δ) in proportion to proximity. Integer b
+    (where the two-sided split would assign 0 + 0) puts the whole mass
+    on atom l, matching the hat-kernel formulation of the Pallas
+    schedules. Returns (B, K) masses; Σ_i m_i == Σ_j p_j (projection
+    preserves total mass).
+    """
+    B, K = probs.shape
+    delta = (v_max - v_min) / (K - 1) if K > 1 else 0.0
+    db = delta if delta > 0.0 else 1.0
+    z = v_min + delta * jnp.arange(K, dtype=jnp.float32)
+    p32 = probs.astype(jnp.float32)
+    tz = jnp.clip(rewards.astype(jnp.float32)[:, None]
+                  + gamma_n * (1.0 - dones.astype(jnp.float32)[:, None])
+                  * z[None, :], v_min, v_max)
+    b = (tz - v_min) / db                                   # (B, K) in [0, K-1]
+    low = jnp.floor(b)
+    li = low.astype(jnp.int32)
+    ui = jnp.minimum(li + 1, K - 1)
+    wl = 1.0 - (b - low)                                    # 1 at integer b
+    wu = b - low
+
+    def scatter_row(p, l, u, wl, wu):
+        return (jnp.zeros((K,), jnp.float32)
+                .at[l].add(p * wl).at[u].add(p * wu))
+
+    return jax.vmap(scatter_row)(p32, li, ui, wl, wu)
 
 
 def slstm_scan(wx, R, b, state, n_heads: int):

@@ -151,27 +151,30 @@ def lower_dqn_variant(variant_name: str, kernel_backend: str) -> Dict[str, Any]:
     import jax.numpy as jnp
 
     from repro.config import DQNConfig
-    from repro.configs.dqn_nature import NatureCNNConfig, get_variant
+    from repro.configs.dqn_nature import (NatureCNNConfig, cnn_config_for,
+                                          get_variant)
     from repro.core.concurrent import (TrainerCarry, make_concurrent_cycle,
                                        prepopulate)
     from repro.core.replay import replay_init
     from repro.core.synchronized import sampler_init
     from repro.envs import get_env
-    from repro.models.nature_cnn import q_forward, q_init
+    from repro.models.nature_cnn import q_forward, q_init, q_logits
     from repro.optim import adamw
 
     variant = get_variant(variant_name)
     FS = 10
     spec = get_env("catch")
-    ncfg = NatureCNNConfig(frame_size=FS, frame_stack=2, convs=((8, 3, 1),),
-                           hidden=16, n_actions=spec.n_actions,
-                           dueling=variant.dueling)
+    ncfg = cnn_config_for(variant, NatureCNNConfig(
+        frame_size=FS, frame_stack=2, convs=((8, 3, 1),), hidden=16,
+        n_actions=spec.n_actions))
     dcfg = DQNConfig(minibatch_size=8, replay_capacity=512,
                      target_update_period=32, train_period=4, n_envs=4,
                      frame_stack=2, eps_anneal_steps=1000, variant=variant)
     key = jax.random.PRNGKey(0)
     params = q_init(ncfg, spec.n_actions, key)
-    qf = lambda p, o: q_forward(p, o, ncfg)
+    qf = lambda p, o, k=None: q_forward(p, o, ncfg, noise_key=k)
+    qlog = ((lambda p, o, k=None: q_logits(p, o, ncfg, noise_key=k))
+            if variant.distributional else None)
     opt = adamw(1e-3, weight_decay=0.0)
     replay = replay_init(dcfg.replay_capacity, (FS, FS, 2),
                          prioritized=variant.prioritized)
@@ -183,7 +186,8 @@ def lower_dqn_variant(variant_name: str, kernel_backend: str) -> Dict[str, Any]:
     rec: Dict[str, Any] = {"arch": "dqn", "shape": f"variant_{variant_name}",
                            "mesh": "1x1", "n_chips": 1}
     cycle = make_concurrent_cycle(spec, qf, opt, dcfg, frame_size=FS,
-                                  kernel_backend=kernel_backend)
+                                  kernel_backend=kernel_backend,
+                                  q_logits=qlog)
     t0 = time.time()
     lowered = jax.jit(cycle).lower(carry)
     rec["lower_s"] = round(time.time() - t0, 2)
@@ -252,7 +256,7 @@ def main():
         if os.path.exists(args.out):
             with open(args.out) as f:
                 results = json.load(f)
-        failed = 0
+        failed = []
         for name in names:
             print(f"=== dqn x {name}", flush=True)
             try:
@@ -267,15 +271,16 @@ def main():
                 rec = {"arch": "dqn", "shape": f"variant_{name}",
                        "mesh": "1x1", "variant": name, "error": str(e),
                        "traceback": traceback.format_exc()[-2000:]}
-                failed += 1
-                print(f"    FAILED: {e}", flush=True)
+                failed.append(name)
+                print(f"    FAILED [variant={name}]: {e}", flush=True)
             results = [r for r in results
                        if not (r.get("arch") == "dqn"
                                and r.get("variant") == name)]
             results.append(rec)
             with open(args.out, "w") as f:
                 json.dump(results, f, indent=1)
-        print(f"\n{len(names) - failed} OK, {failed} failed")
+        print(f"\n{len(names) - len(failed)} OK, {len(failed)} failed"
+              + (f" ({', '.join(failed)})" if failed else ""))
         return 1 if failed else 0
 
     archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")

@@ -9,10 +9,12 @@ The optimizer defaults to AdamW for fast convergence on the JAX envs;
 --paper-optimizer selects Mnih's centered RMSProp (2.5e-4), faithful but
 tuned for 200M-frame Atari budgets.
 
---variant {dqn,double,dueling,per,rainbow_lite} selects the off-policy
-variant preset (configs/dqn_nature.VARIANTS): double/dueling Q-learning,
-proportional prioritized replay over the segment-tree kernel, n-step
-returns, or all of them (rainbow_lite). --dryrun shrinks everything to a
+--variant {dqn,double,dueling,per,c51,noisy,rainbow_lite,rainbow}
+selects the off-policy variant preset (configs/dqn_nature.VARIANTS;
+matrix in docs/variants.md): double/dueling Q-learning, proportional
+prioritized replay over the segment-tree kernel, n-step returns, C51
+distributional heads over the categorical-projection kernel, NoisyNet
+exploration, or all of them (rainbow). --dryrun shrinks everything to a
 few seconds for the CI variant smoke job.
 """
 
@@ -25,9 +27,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import DQNConfig, ExecConfig
-from repro.configs.dqn_nature import VARIANTS, NatureCNNConfig, get_variant
+from repro.configs.dqn_nature import (VARIANTS, NatureCNNConfig,
+                                      cnn_config_for, get_variant)
 from repro.envs import get_env
-from repro.models.nature_cnn import q_forward, q_init
+from repro.models.nature_cnn import q_forward, q_init, q_logits
 from repro.optim import adamw, centered_rmsprop
 from repro.core.replay import replay_init
 from repro.core.synchronized import evaluate, sampler_init
@@ -66,12 +69,11 @@ def main(argv=None):
     variant = get_variant(args.variant)
     spec = get_env(args.env)
     small = args.frame_size == 10
-    ncfg = NatureCNNConfig(
+    ncfg = cnn_config_for(variant, NatureCNNConfig(
         frame_size=args.frame_size, frame_stack=2 if small else 4,
         convs=((16, 3, 1), (16, 3, 1)) if small else
               ((32, 8, 4), (64, 4, 2), (64, 3, 1)),
-        hidden=64 if small else 512, n_actions=spec.n_actions,
-        dueling=variant.dueling)
+        hidden=64 if small else 512, n_actions=spec.n_actions))
     dcfg = DQNConfig(
         minibatch_size=32, replay_capacity=16384,
         target_update_period=args.cycle_steps, train_period=2,
@@ -84,7 +86,10 @@ def main(argv=None):
     params = q_init(ncfg, spec.n_actions, key)
     ec = ExecConfig(compute_dtype=args.compute_dtype,
                     kernel_backend=args.kernel_backend)
-    qf = lambda p, o: q_forward(p, o, ncfg, ec)
+    # trailing noise key (NoisyNet; None = μ-only, e.g. greedy eval)
+    qf = lambda p, o, k=None: q_forward(p, o, ncfg, ec, noise_key=k)
+    qlog = ((lambda p, o, k=None: q_logits(p, o, ncfg, ec, noise_key=k))
+            if variant.distributional else None)
     opt = (centered_rmsprop(2.5e-4) if args.paper_optimizer
            else adamw(1e-3, weight_decay=0.0))
 
@@ -98,7 +103,7 @@ def main(argv=None):
 
     cycle = jax.jit(make_concurrent_cycle(
         spec, qf, opt, dcfg, frame_size=fs,
-        kernel_backend=args.kernel_backend))
+        kernel_backend=args.kernel_backend, q_logits=qlog))
     ev = jax.jit(lambda p, k: evaluate(spec, qf, p, k, dcfg, n_episodes=64,
                                        frame_size=fs, max_steps=64))
     carry = TrainerCarry(params, opt.init(params), replay, sampler,

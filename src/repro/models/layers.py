@@ -81,6 +81,35 @@ def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
     return jnp.mean(nll)
 
 
+def factorized_noise(key: jax.Array, n: int) -> jax.Array:
+    """f(ε) = sign(ε)·√|ε| with ε ~ N(0, 1) — the factorized-Gaussian
+    noise transform of NoisyNets (Fortunato et al. 2018, §3.1)."""
+    x = jax.random.normal(key, (n,), jnp.float32)
+    return jnp.sign(x) * jnp.sqrt(jnp.abs(x))
+
+
+def noisy_linear(x: jax.Array, w_mu: jax.Array, w_sigma: jax.Array,
+                 b_mu: jax.Array, b_sigma: jax.Array,
+                 key: Optional[jax.Array] = None) -> jax.Array:
+    """Factorized-Gaussian noisy affine map (Fortunato et al. 2018).
+
+    w = μ_w + σ_w ⊙ (f(ε_in) ⊗ f(ε_out)), b = μ_b + σ_b ⊙ f(ε_out);
+    ``key=None`` is the noise-free μ-only path (deterministic greedy
+    evaluation). The caller controls the resampling schedule by choosing
+    keys — the concurrent cycle derives them from the cycle RNG so two
+    runs from the same carry stay bitwise identical.
+    """
+    dt = x.dtype
+    if key is None:
+        return x @ w_mu.astype(dt) + b_mu.astype(dt)
+    kin, kout = jax.random.split(key)
+    ein = factorized_noise(kin, w_mu.shape[0])
+    eout = factorized_noise(kout, w_mu.shape[1])
+    w = w_mu + w_sigma * jnp.outer(ein, eout)
+    b = b_mu + b_sigma * eout
+    return x @ w.astype(dt) + b.astype(dt)
+
+
 def sinusoidal_positions(n: int, d: int) -> np.ndarray:
     """Fixed sinusoidal position table (whisper encoder)."""
     pos = np.arange(n, dtype=np.float32)[:, None]

@@ -31,9 +31,10 @@ Tree = Any
 class Leaf:
     shape: Tuple[int, ...]
     axes: Tuple[Optional[str], ...]
-    init: str = "normal"       # normal | zeros | ones | embed | scaled
+    init: str = "normal"       # normal | zeros | ones | embed | const
     dtype: Any = jnp.float32
     fan_in: Optional[int] = None  # overrides scale for "normal"/"scaled"
+    value: float = 0.0         # fill value when init == "const"
 
     def __post_init__(self):
         assert len(self.shape) == len(self.axes), (self.shape, self.axes)
@@ -62,6 +63,9 @@ def _init_leaf(key: jax.Array, leaf: Leaf) -> jax.Array:
         return jnp.zeros(leaf.shape, leaf.dtype)
     if leaf.init == "ones":
         return jnp.ones(leaf.shape, leaf.dtype)
+    if leaf.init == "const":
+        # deterministic fill (e.g. NoisyNet σ = σ0/√fan_in); no key used
+        return jnp.full(leaf.shape, leaf.value, leaf.dtype)
     # fan-in scaled normal; embeddings scale 1.0
     if leaf.init == "embed":
         scale = 0.02
@@ -104,7 +108,8 @@ def stacked(spec: Tree, n: int) -> Tree:
     """Add a leading 'layers' scan dimension of size n to every leaf."""
     def add(_, leaf: Leaf) -> Leaf:
         return Leaf((n,) + leaf.shape, ("layers",) + leaf.axes,
-                    init=leaf.init, dtype=leaf.dtype, fan_in=leaf.fan_in)
+                    init=leaf.init, dtype=leaf.dtype, fan_in=leaf.fan_in,
+                    value=leaf.value)
     return _build(spec, add)
 
 

@@ -5,7 +5,7 @@ Two layers of coverage:
     ``kernels/backend.py`` must pick the documented concrete backend
     (mosaic/triton/interpret/ref) with per-op fallback to ref;
   * numerics — every backend exercisable on this host must agree with
-    the pure-XLA oracle in ``kernels/ref.py`` for all five ops. On a
+    the pure-XLA oracle in ``kernels/ref.py`` for all seven ops. On a
     CPU-only host that is {ref, interpret}; the GPU-Triton schedules are
     additionally exercised through the Pallas interpreter so their
     (different) loop structure is validated everywhere.
@@ -190,6 +190,69 @@ def test_segment_tree_backends(backend):
         assert (leaves[np.asarray(out)] > 0).all()
 
 
+def _catproj_case(key, B=13, K=51):
+    kp, kr, kd = jax.random.split(key, 3)
+    logits = jax.random.normal(kp, (B, K))
+    probs = jax.nn.softmax(logits, axis=-1)
+    rewards = 3.0 * jax.random.normal(kr, (B,))
+    dones = (jax.random.uniform(kd, (B,)) < 0.3).astype(jnp.float32)
+    return probs, rewards, dones
+
+
+@pytest.mark.parametrize("backend", [kb.REF, kb.INTERPRET, kb.MOSAIC,
+                                     kb.TRITON])
+def test_categorical_projection_backends(backend):
+    if backend not in _host_backends("categorical_projection"):
+        pytest.skip(f"{backend} not runnable on {kb.platform()}")
+    for B, K in ((3, 2), (13, 51), (64, 128)):
+        probs, rewards, dones = _catproj_case(jax.random.PRNGKey(B + K), B, K)
+        out = ops.categorical_projection(probs, rewards, dones, -10.0, 10.0,
+                                         0.9 ** 3, backend=backend)
+        expect = ref.categorical_projection(probs, rewards, dones,
+                                            v_min=-10.0, v_max=10.0,
+                                            gamma_n=0.9 ** 3)
+        _assert_close(out, expect, atol=1e-5, rtol=1e-5)
+        # projection preserves total mass
+        np.testing.assert_allclose(np.asarray(out.sum(-1)), 1.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", [kb.REF, kb.INTERPRET, kb.MOSAIC,
+                                     kb.TRITON])
+def test_categorical_projection_degenerate_supports(backend):
+    """Single-atom support and v_min == v_max both collapse every
+    Bellman-shifted atom onto atom 0 (the clip pins Tz to v_min);
+    all backends must agree exactly."""
+    if backend not in _host_backends("categorical_projection"):
+        pytest.skip(f"{backend} not runnable on {kb.platform()}")
+    probs, rewards, dones = _catproj_case(jax.random.PRNGKey(0), 7, 1)
+    out = ops.categorical_projection(probs, rewards, dones, -1.0, -1.0, 0.99,
+                                     backend=backend)
+    np.testing.assert_allclose(np.asarray(out), np.ones((7, 1)), atol=1e-6)
+    # v_min == v_max with K > 1: all mass lands on atom 0
+    probs, rewards, dones = _catproj_case(jax.random.PRNGKey(1), 7, 8)
+    out = ops.categorical_projection(probs, rewards, dones, 2.0, 2.0, 0.9,
+                                     backend=backend)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), 1.0, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(out[:, 1:]),
+                                  np.zeros((7, 7), np.float32))
+
+
+def test_categorical_projection_two_hot_expectation():
+    """The disaggregated learner's reuse: projecting a point mass at the
+    zero atom shifted by a scalar gives a two-hot whose expectation is
+    the scalar clipped into the support."""
+    K, vmin, vmax = 33, -1.0, 1.0
+    z = np.asarray(ops.support(K, vmin, vmax))
+    adv = jnp.asarray([-3.0, -0.37, 0.0, 0.61, 5.0], jnp.float32)
+    mid = jnp.zeros((5, K), jnp.float32).at[:, K // 2].set(1.0)
+    m = ops.categorical_projection(mid, adv - z[K // 2],
+                                   jnp.zeros_like(adv), vmin, vmax, 1.0,
+                                   backend="ref")
+    got = np.asarray(m) @ z
+    np.testing.assert_allclose(got, np.clip(np.asarray(adv), vmin, vmax),
+                               atol=1e-6)
+
+
 @pytest.mark.parametrize("backend", [kb.REF, kb.INTERPRET, kb.MOSAIC,
                                      kb.TRITON])
 def test_slstm_scan_backends(backend):
@@ -250,6 +313,21 @@ def test_triton_segment_tree_schedule_interpreted():
         out = segment_tree_kernel_gpu(tree, targets, interpret=True)
         np.testing.assert_array_equal(
             np.asarray(out), np.asarray(ref.segment_tree_sample(tree, targets)))
+
+
+def test_triton_categorical_projection_schedule_interpreted():
+    from repro.kernels.categorical_projection import (
+        categorical_projection_kernel_gpu)
+    for B, K in ((5, 3), (40, 51)):
+        probs, rewards, dones = _catproj_case(jax.random.PRNGKey(200 + B),
+                                              B, K)
+        out = categorical_projection_kernel_gpu(
+            probs, rewards, dones, v_min=-10.0, v_max=10.0, gamma_n=0.81,
+            interpret=True)
+        expect = ref.categorical_projection(probs, rewards, dones,
+                                            v_min=-10.0, v_max=10.0,
+                                            gamma_n=0.81)
+        _assert_close(out, expect, atol=1e-5, rtol=1e-5)
 
 
 def test_triton_ssm_schedule_interpreted():

@@ -103,6 +103,48 @@ def test_tree_root_and_heap_invariant(pri):
         assert tree[i] == tree[2 * i] + tree[2 * i + 1]
 
 
+# ---------------------------------------------------------------------------
+# categorical (C51) projection properties
+# ---------------------------------------------------------------------------
+
+def _normalize(masses):
+    p = np.asarray(masses, np.float32)
+    return p / p.sum()
+
+
+@settings(max_examples=25, deadline=None)
+@given(masses=st.lists(st.integers(1, 9), min_size=2, max_size=64),
+       reward=st.floats(-30.0, 30.0, allow_nan=False, width=32),
+       done=st.booleans(),
+       gamma_n=st.floats(0.0, 1.0, allow_nan=False, width=32))
+def test_projection_preserves_total_mass(masses, reward, done, gamma_n):
+    """Σ_i m_i == Σ_j p_j for any reward/done/γⁿ: every Bellman-shifted
+    atom is clipped into the support, so its hat weights sum to 1 and no
+    mass can leak off either edge."""
+    p = jnp.asarray(_normalize(masses))[None, :]
+    m = ops.categorical_projection(
+        p, jnp.asarray([reward], jnp.float32),
+        jnp.asarray([float(done)], jnp.float32), -10.0, 10.0,
+        float(gamma_n), backend="ref")
+    np.testing.assert_allclose(np.asarray(m).sum(), 1.0, atol=1e-5)
+    assert (np.asarray(m) >= -1e-7).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(masses=st.lists(st.integers(1, 9), min_size=2, max_size=64))
+def test_projection_identity_when_no_clamping_needed(masses):
+    """r=0, done=0, γⁿ=1 leaves the support untouched (Tz_j = z_j, no
+    clamping anywhere): the projection must be the identity to float
+    rounding, on the scatter oracle and the gather-interpolate kernel
+    alike."""
+    p = jnp.asarray(_normalize(masses))[None, :]
+    zero = jnp.zeros((1,), jnp.float32)
+    for backend in ("ref", "interpret"):
+        m = ops.categorical_projection(p, zero, zero, -10.0, 10.0, 1.0,
+                                       backend=backend)
+        np.testing.assert_allclose(np.asarray(m), np.asarray(p), atol=1e-5)
+
+
 @settings(max_examples=15, deadline=None)
 @given(cap=st.integers(2, 32), n1=st.integers(1, 40), n2=st.integers(1, 40),
        batch=st.integers(1, 16), seed=st.integers(0, 100))

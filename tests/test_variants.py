@@ -14,9 +14,10 @@ import numpy as np
 import pytest
 
 from repro.config import DQNConfig, VariantConfig
-from repro.configs.dqn_nature import VARIANTS, NatureCNNConfig, get_variant
+from repro.configs.dqn_nature import (VARIANTS, NatureCNNConfig,
+                                      cnn_config_for, get_variant)
 from repro.envs import get_env
-from repro.models.nature_cnn import q_forward, q_init, q_param_spec
+from repro.models.nature_cnn import q_forward, q_init, q_logits, q_param_spec
 from repro.optim import adamw
 from repro.core.dqn import q_loss_variant
 from repro.core.replay import replay_init
@@ -29,16 +30,18 @@ FS = 10
 
 def _setup(variant: VariantConfig, C=16, W=4):
     spec = get_env("catch")
-    ncfg = NatureCNNConfig(frame_size=FS, frame_stack=2, convs=((8, 3, 1),),
-                           hidden=16, n_actions=spec.n_actions,
-                           dueling=variant.dueling)
+    ncfg = cnn_config_for(variant, NatureCNNConfig(
+        frame_size=FS, frame_stack=2, convs=((8, 3, 1),), hidden=16,
+        n_actions=spec.n_actions))
     dcfg = DQNConfig(minibatch_size=8, replay_capacity=128,
                      target_update_period=C, train_period=4,
                      prepopulate=32, n_envs=W, frame_stack=2,
                      eps_anneal_steps=1000, variant=variant)
     key = jax.random.PRNGKey(0)
     params = q_init(ncfg, spec.n_actions, key)
-    qf = lambda p, o: q_forward(p, o, ncfg)
+    qf = lambda p, o, k=None: q_forward(p, o, ncfg, noise_key=k)
+    qlog = ((lambda p, o, k=None: q_logits(p, o, ncfg, noise_key=k))
+            if variant.distributional else None)
     opt = adamw(1e-3, weight_decay=0.0)
     replay = replay_init(dcfg.replay_capacity, (FS, FS, 2),
                          prioritized=variant.prioritized)
@@ -47,7 +50,7 @@ def _setup(variant: VariantConfig, C=16, W=4):
                                   dcfg.prepopulate, FS)
     carry = TrainerCarry(params, opt.init(params), replay, sampler,
                          jnp.int32(0))
-    return spec, dcfg, qf, opt, carry
+    return spec, dcfg, qf, qlog, opt, carry
 
 
 def _assert_trees_equal(a, b):
@@ -62,14 +65,15 @@ def test_cycle_bitwise_deterministic(name):
     """Two executions of the jitted cycle from the same carry, and a
     second independently-jitted cycle, agree bit-for-bit."""
     variant = get_variant(name)
-    spec, dcfg, qf, opt, carry = _setup(variant)
-    cycle = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg, frame_size=FS))
+    spec, dcfg, qf, qlog, opt, carry = _setup(variant)
+    cycle = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg, frame_size=FS,
+                                          q_logits=qlog))
     c1, m1 = cycle(carry)
     c2, m2 = cycle(carry)
     _assert_trees_equal(c1, c2)
     _assert_trees_equal(m1, m2)
     cycle_b = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg,
-                                            frame_size=FS))
+                                            frame_size=FS, q_logits=qlog))
     c3, m3 = cycle_b(carry)
     _assert_trees_equal(c1, c3)
     # and a second chained cycle stays deterministic (priority flush,
@@ -80,7 +84,7 @@ def test_cycle_bitwise_deterministic(name):
 def test_default_variant_matches_legacy_cycle():
     """VariantConfig() is the identity: the dqn preset reproduces the
     pre-variant cycle bit-for-bit (same RNG stream, same formulas)."""
-    spec, dcfg, qf, opt, carry = _setup(get_variant("dqn"))
+    spec, dcfg, qf, _, opt, carry = _setup(get_variant("dqn"))
     got, _ = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg,
                                            frame_size=FS))(carry)
     # legacy reference: the exact seed-era formulas, inline
@@ -190,10 +194,101 @@ def test_presets_compose_as_documented():
     assert VARIANTS["rainbow_lite"].dueling
     assert VARIANTS["rainbow_lite"].prioritized
     assert VARIANTS["rainbow_lite"].n_step == 3
+    assert not VARIANTS["rainbow_lite"].distributional
+    # full Rainbow = rainbow_lite + C51 + noisy (Hessel et al. 2018)
+    rb = VARIANTS["rainbow"]
+    assert rb.double and rb.dueling and rb.prioritized and rb.n_step == 3
+    assert rb.distributional and rb.num_atoms == 51 and rb.noisy
+    assert VARIANTS["c51"].distributional and not VARIANTS["c51"].noisy
+    assert VARIANTS["noisy"].noisy and not VARIANTS["noisy"].distributional
     for v in VARIANTS.values():
         v.validate()
     with pytest.raises(KeyError):
         get_variant("nope")
+
+
+def test_cnn_config_follows_variant():
+    base = NatureCNNConfig(frame_size=10, frame_stack=2, convs=((8, 3, 1),),
+                           hidden=16)
+    ncfg = cnn_config_for(get_variant("rainbow"), base)
+    assert ncfg.dueling and ncfg.noisy and ncfg.num_atoms == 51
+    assert cnn_config_for(get_variant("dqn"), base) == base
+    # non-distributional presets keep the scalar head even though the
+    # VariantConfig carries (inert) atom defaults
+    assert cnn_config_for(get_variant("noisy"), base).num_atoms == 1
+
+
+def test_c51_head_shapes_and_expectation():
+    ncfg = NatureCNNConfig(frame_size=10, frame_stack=2, convs=((8, 3, 1),),
+                           hidden=16, num_atoms=5, v_min=-2.0, v_max=2.0)
+    params = q_init(ncfg, 4, jax.random.PRNGKey(0))
+    obs = jnp.zeros((3, 10, 10, 2), jnp.uint8)
+    logits = q_logits(params, obs, ncfg)
+    assert logits.shape == (3, 4, 5)
+    q = q_forward(params, obs, ncfg)
+    assert q.shape == (3, 4)
+    z = jnp.linspace(-2.0, 2.0, 5)
+    expect = jnp.sum(jax.nn.softmax(logits, -1) * z, -1)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(expect), rtol=1e-6)
+    # dueling C51 combines per-atom streams before the softmax
+    dcfg = NatureCNNConfig(frame_size=10, frame_stack=2, convs=((8, 3, 1),),
+                           hidden=16, num_atoms=5, dueling=True)
+    dparams = q_init(dcfg, 4, jax.random.PRNGKey(1))
+    assert q_logits(dparams, obs, dcfg).shape == (3, 4, 5)
+
+
+def test_noisy_head_mu_path_and_resampling():
+    """key=None is the μ-only deterministic path; distinct keys give
+    distinct Q-values; the same key is reproducible."""
+    ncfg = NatureCNNConfig(frame_size=10, frame_stack=2, convs=((8, 3, 1),),
+                           hidden=16, noisy=True)
+    params = q_init(ncfg, 4, jax.random.PRNGKey(0))
+    assert "fc_w_sigma" in params and "out_w_sigma" in params
+    # σ init is the documented constant σ0/√fan_in
+    flat = 8 * 8 * 8
+    np.testing.assert_allclose(np.asarray(params["fc_w_sigma"])[0, 0],
+                               0.5 / np.sqrt(flat), rtol=1e-6)
+    obs = jax.random.randint(jax.random.PRNGKey(9), (2, 10, 10, 2), 0, 255,
+                             dtype=jnp.int32).astype(jnp.uint8)
+    q_mu = q_forward(params, obs, ncfg)
+    q_mu2 = q_forward(params, obs, ncfg, noise_key=None)
+    np.testing.assert_array_equal(np.asarray(q_mu), np.asarray(q_mu2))
+    k = jax.random.PRNGKey(3)
+    qa = q_forward(params, obs, ncfg, noise_key=k)
+    qb = q_forward(params, obs, ncfg, noise_key=k)
+    np.testing.assert_array_equal(np.asarray(qa), np.asarray(qb))
+    qc = q_forward(params, obs, ncfg, noise_key=jax.random.PRNGKey(4))
+    assert np.abs(np.asarray(qa) - np.asarray(qc)).max() > 0
+    assert np.abs(np.asarray(qa) - np.asarray(q_mu)).max() > 0
+
+
+def test_c51_loss_projects_onto_terminal_reward():
+    """With done=1 the projected target is a point mass at clip(r): the
+    cross-entropy reduces to -log p_θ(atom(r)); a network already
+    concentrated there gets ~0 loss, per-sample CE doubles as the PER
+    priority signal."""
+    from repro.core.dqn import c51_loss_variant
+    variant = VariantConfig(name="c51", distributional=True, num_atoms=5,
+                            v_min=-2.0, v_max=2.0)
+    B, A, K = 4, 3, 5
+    batch = {
+        "obs": jnp.zeros((B, 2), jnp.float32),
+        "next_obs": jnp.ones((B, 2), jnp.float32),
+        "action": jnp.zeros((B,), jnp.int32),
+        "reward": jnp.full((B,), 1.0),           # atom index 3 on the grid
+        "done": jnp.ones((B,), jnp.bool_),
+    }
+    concentrated = jnp.full((A, K), -20.0).at[:, 3].set(20.0)
+    qlog = lambda p, o: jnp.broadcast_to(p, (o.shape[0], A, K))
+    loss_hit, ce_hit = c51_loss_variant(concentrated, concentrated, batch,
+                                        qlog, 0.9, variant)
+    spread = jnp.zeros((A, K))
+    loss_miss, ce_miss = c51_loss_variant(spread, spread, batch, qlog, 0.9,
+                                          variant)
+    assert float(loss_hit) < 1e-3
+    assert float(loss_miss) > 1.0
+    assert ce_hit.shape == (B,)
+    assert (np.asarray(ce_miss) > np.asarray(ce_hit)).all()
 
 
 # ---------------------------------------------------------------------------
