@@ -6,31 +6,50 @@ anchors on 49 Atari games; offline we report trained-vs-random returns
 on the 4 pure-JAX pixel envs, normalized the same way the paper
 normalizes (score - random) / (optimal - random) where optimal is the
 best return the env admits (catch/pong/breakout: known; seeker: proxy).
+
+Since PR 4 the whole table trains as ONE jitted fleet program: every
+env carries a vmapped population of S seed replicas
+(core/population.py), and a single jitted ``fleet_cycle`` advances all
+4 env populations per call — 4 × S concurrent C-cycles per dispatch,
+instead of the old Python loop of 4 single-seed runs. Scores are
+averaged over seeds (± the seed spread), which is what the population
+axis buys: seed-robust numbers at one-program cost.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List
+import dataclasses
+from typing import Callable, Dict, List
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import DQNConfig
 from repro.configs.dqn_nature import NatureCNNConfig
 from repro.envs import get_env
 from repro.models.nature_cnn import q_forward, q_init
 from repro.optim import adamw
-from repro.core.replay import replay_init
-from repro.core.synchronized import evaluate, sampler_init
-from repro.core.concurrent import TrainerCarry, make_concurrent_cycle, prepopulate
+from repro.core.population import (eval_keys, make_population_cycle,
+                                   make_replica_init, population_evaluate,
+                                   population_init, seed_array)
 
 FS = 10
+ENV_NAMES = ("catch", "pong", "breakout", "seeker")
 # best-achievable mean returns (optimal play) used for normalization
 OPTIMAL = {"catch": 1.0, "pong": 20.0, "breakout": 15.0, "seeker": 3.0}
 
 
-def train_one(env_name: str, cycles: int = 40,
-              seed: int = 0) -> Dict[str, float]:
+@dataclasses.dataclass
+class _Stage:
+    cycle: Callable
+    evaluate: Callable
+    seeds: jax.Array
+    init_one: Callable
+
+
+def _build_stage(env_name: str, cycles: int, seeds: int,
+                 base_seed: int) -> _Stage:
     spec = get_env(env_name)
     ncfg = NatureCNNConfig(frame_size=FS, frame_stack=2,
                            convs=((16, 3, 1), (16, 3, 1)), hidden=64,
@@ -39,40 +58,69 @@ def train_one(env_name: str, cycles: int = 40,
                      target_update_period=256, train_period=2,
                      prepopulate=2048, n_envs=8, frame_stack=2,
                      eps_anneal_steps=cycles * 128, discount=0.9)
-    key = jax.random.PRNGKey(seed)
-    qf = lambda p, o: q_forward(p, o, ncfg)
-    params = q_init(ncfg, spec.n_actions, key)
+    qf = lambda p, o, k=None: q_forward(p, o, ncfg)  # noqa: E731
     opt = adamw(1e-3, weight_decay=0.0)
-    replay = replay_init(dcfg.replay_capacity, (FS, FS, 2))
-    sampler = sampler_init(spec, dcfg, key, FS)
-    replay, sampler = jax.jit(
-        lambda r, s: prepopulate(spec, qf, dcfg, r, s, dcfg.prepopulate, FS)
-    )(replay, sampler)
-    cycle = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg, frame_size=FS))
-    ev = jax.jit(lambda p, k: evaluate(spec, qf, p, k, dcfg, n_episodes=64,
-                                       frame_size=FS,
-                                       max_steps=spec.max_steps + 2))
-    carry = TrainerCarry(params, opt.init(params), replay, sampler,
-                         jnp.int32(0))
-    random_score = float(ev(carry.params, key))
-    best = -1e9
+    init_one = make_replica_init(
+        spec, lambda k: q_init(ncfg, spec.n_actions, k), qf, opt, dcfg, FS)
+    s = seed_array(base_seed, seeds)
+    cycle = make_population_cycle(spec, qf, opt, dcfg, frame_size=FS)
+    ev = lambda p, k: population_evaluate(  # noqa: E731
+        spec, qf, p, k, dcfg, n_episodes=64, frame_size=FS,
+        max_steps=spec.max_steps + 2)
+    return _Stage(cycle, ev, s, init_one)
+
+
+def train_fleet(cycles: int = 40, seeds: int = 2,
+                base_seed: int = 0) -> List[Dict]:
+    """Train all 4 envs × ``seeds`` replicas as one jitted program and
+    return one row per env with seed-averaged normalized scores."""
+    stages = {e: _build_stage(e, cycles, seeds, base_seed)
+              for e in ENV_NAMES}
+
+    carries = jax.jit(lambda sd: {
+        e: population_init(stages[e].init_one, sd[e]) for e in ENV_NAMES
+    })({e: stages[e].seeds for e in ENV_NAMES})
+
+    # ONE jitted super-step advancing every env's population: 4 × S
+    # concurrent C-cycles per dispatch, zero Python between them.
+    fleet_cycle = jax.jit(lambda cs: dict(
+        zip(ENV_NAMES, (stages[e].cycle(cs[e]) for e in ENV_NAMES))))
+    fleet_eval = jax.jit(lambda cs, i: {
+        e: stages[e].evaluate(cs[e].params, eval_keys(stages[e].seeds, i))
+        for e in ENV_NAMES})
+
+    random_scores = {e: np.asarray(v)
+                     for e, v in fleet_eval(carries, -1).items()}
+    best = {e: np.full(seeds, -1e9) for e in ENV_NAMES}
     for i in range(cycles):
-        carry, _ = cycle(carry)
+        out = fleet_cycle(carries)
+        carries = {e: out[e][0] for e in ENV_NAMES}
         if (i + 1) % 10 == 0:                 # periodic eval, keep the best
-            best = max(best, float(ev(carry.params, jax.random.PRNGKey(i))))
-    norm = (best - random_score) / max(OPTIMAL[env_name] - random_score, 1e-9)
-    return {"env": env_name, "random": random_score, "trained": best,
-            "normalized_pct": 100.0 * norm,
-            "steps": int(carry.step)}
+            for e, v in fleet_eval(carries, i).items():
+                best[e] = np.maximum(best[e], np.asarray(v))
+
+    rows = []
+    for e in ENV_NAMES:
+        norm = 100.0 * (best[e] - random_scores[e]) \
+            / np.maximum(OPTIMAL[e] - random_scores[e], 1e-9)
+        rows.append({
+            "env": e, "seeds": seeds,
+            "random": float(np.mean(random_scores[e])),
+            "trained": float(np.mean(best[e])),
+            "normalized_pct": float(np.mean(norm)),
+            "normalized_pct_std": float(np.std(norm)),
+            "steps": int(np.asarray(carries[e].step)[0]),
+        })
+    return rows
 
 
-def main(cycles: int = 40) -> List[Dict]:
-    rows = [train_one(e, cycles) for e in ("catch", "pong", "breakout",
-                                           "seeker")]
-    print(f"{'env':10s} {'random':>8s} {'trained':>8s} {'norm %':>8s}")
+def main(cycles: int = 40, seeds: int = 2) -> List[Dict]:
+    rows = train_fleet(cycles, seeds)
+    print(f"{'env':10s} {'random':>8s} {'trained':>8s} "
+          f"{'norm %':>8s} {'± std':>7s}")
     for r in rows:
         print(f"{r['env']:10s} {r['random']:8.2f} {r['trained']:8.2f} "
-              f"{r['normalized_pct']:8.1f}")
+              f"{r['normalized_pct']:8.1f} {r['normalized_pct_std']:7.1f}")
     return rows
 
 

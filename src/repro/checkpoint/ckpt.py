@@ -49,6 +49,10 @@ def _unflatten_into(template: Any, arrays, prefix: str = ""):
     if isinstance(template, (tuple, list)):
         vals = [_unflatten_into(v, arrays, f"{prefix}__{i}{SEP}")
                 for i, v in enumerate(template)]
+        if hasattr(template, "_fields"):
+            # NamedTuples (TrainerCarry, SamplerState, ...) take their
+            # fields positionally, not as one iterable
+            return type(template)(*vals)
         return type(template)(vals)
     return arrays[prefix.rstrip(SEP)]
 

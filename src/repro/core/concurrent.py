@@ -28,7 +28,9 @@ max priority). n-step aggregation happens on the staging buffer before
 the flush. NoisyNet exploration replaces the ε-greedy schedule (ε=0)
 with parameter noise resampled once per cycle for the actor and once
 per update for the trainer — every key is folded out of the carry's
-step counter, so the cycle stays a pure function of its carry. C51
+replica seed and step counter (``replica_key``), so the cycle stays a
+pure function of its carry and a vmapped population of carries with
+distinct seeds (core/population.py) runs decorrelated replicas. C51
 losses ride the same PER staging with cross-entropy in place of |td|.
 Every variant therefore keeps the paper's snapshot-𝒟 determinism
 guarantee — locked in by tests/test_variants.py. docs/architecture.md
@@ -58,6 +60,20 @@ class TrainerCarry(NamedTuple):
     replay: ReplayState
     sampler: SamplerState
     step: jax.Array          # global env-step counter t
+    # Replica seed: every RNG stream the cycle derives (trainer sampling,
+    # NoisyNet draws) folds this in, so a population of carries vmapped
+    # over distinct seeds runs decorrelated replicas while each replica
+    # stays bitwise-reproducible as a standalone run. Scalar int32; the
+    # default keeps pre-population call sites working (replica 0).
+    seed: jax.Array = 0
+
+
+def replica_key(tag: int, seed: jax.Array, step: jax.Array) -> jax.Array:
+    """The cycle RNG derivation: a stream tag (a small constant per use
+    site), the replica seed, and the step counter — all folded into one
+    key, so every stream is a pure function of (tag, seed, step)."""
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(tag), seed), step)
 
 
 def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
@@ -94,7 +110,7 @@ def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
         # parameter-noise draw, frozen with θ⁻ for all C/W rounds (the
         # key is a pure function of carry.step — determinism preserved).
         if variant.noisy:
-            k_act = jax.random.fold_in(jax.random.PRNGKey(23), carry.step)
+            k_act = replica_key(23, carry.seed, carry.step)
             qf_act = lambda p, o: q_forward(p, o, k_act)  # noqa: E731
         else:
             qf_act = q_forward
@@ -111,7 +127,7 @@ def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
         # staging buffer: (rounds, W, ...) stacked transitions
 
         # --- trainer: C/F updates on θ from the frozen snapshot --------
-        ktrain = jax.random.fold_in(jax.random.PRNGKey(17), carry.step)
+        ktrain = replica_key(17, carry.seed, carry.step)
 
         def split_update_key(k):
             """Sampling key + (noisy only) per-update noise key. Non-
@@ -176,7 +192,7 @@ def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
                     else eps_fn(carry.step)),
         }
         new = TrainerCarry(params, opt_state, replay, sampler,
-                           carry.step + C)
+                           carry.step + C, carry.seed)
         return new, metrics
 
     return cycle
@@ -185,11 +201,16 @@ def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
 def prepopulate(spec: EnvSpec, q_forward: Callable, cfg: DQNConfig,
                 replay: ReplayState, sampler: SamplerState,
                 n: int, frame_size: int = 84):
-    """Fill 𝒟 with n uniform-random transitions (the paper's N=50 000).
-    On a prioritized replay the slots enter at max priority (1.0 before
-    any TD error has been observed)."""
+    """Fill 𝒟 with at least n uniform-random transitions (the paper's
+    N=50 000). On a prioritized replay the slots enter at max priority
+    (1.0 before any TD error has been observed).
+
+    Rounds are rounded *up*: ``n // W`` would truncate whenever W does
+    not divide n, and n-step aggregation drops the last (n_step-1)·W
+    staged transitions, so the round count compensates for both —
+    (rounds - n_step + 1)·W = ceil(n/W)·W >= n transitions land in 𝒟."""
     W = cfg.n_envs
-    rounds = max(n // W, 1)
+    rounds = max(-(-n // W), 1) + (cfg.variant.n_step - 1)
 
     # ε=1 ⇒ uniform-random actions; Q values are ignored by egreedy, so a
     # zero-Q function avoids touching (possibly None) params entirely.

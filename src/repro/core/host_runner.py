@@ -139,11 +139,17 @@ class HostDQNRunner:
         obs = self.stacks[j].copy()
         _, reward, done = self.envs[j].step(int(action))
         frame = self._frame(self.envs[j])
+        # The stored transition's next_obs is the *pre-reset view* — the
+        # new frame pushed onto the un-zeroed history — matching
+        # synchronized.sync_round exactly; only the live stack restarts
+        # from a zeroed history on terminals.
+        next_obs = np.concatenate([self.stacks[j][:, :, 1:],
+                                   frame[:, :, None]], axis=-1)
         if done:
             self.stacks[j][:] = 0
         self._push(j, frame)
         tr = {"obs": obs, "action": action, "reward": reward,
-              "next_obs": self.stacks[j].copy(), "done": done}
+              "next_obs": next_obs, "done": done}
         if self.concurrent:
             self.staging.append(tr)      # flush at the C boundary
         else:

@@ -109,7 +109,14 @@ def evaluate(spec: EnvSpec, q_forward: Callable, params, key: jax.Array,
              cfg: DQNConfig, n_episodes: int = 30, frame_size: int = 84,
              max_steps: int = 1000) -> jax.Array:
     """ε=0.05 greedy evaluation (paper §5.2): mean episode return over
-    n_episodes parallel evaluation streams."""
+    n_episodes parallel evaluation streams.
+
+    Only streams whose episode *finished* within ``max_steps`` enter the
+    mean — a stream cut off mid-episode holds a partial return, and
+    averaging it as if complete biases the score low on long envs
+    (pong/breakout run to 500 steps). When no stream finishes at all the
+    partial-return mean is returned as a fallback (callers should size
+    ``max_steps`` from ``spec.max_steps`` so this never triggers)."""
     eval_cfg = cfg
     kinit, krun = jax.random.split(key)
     env_states = jax.vmap(spec.reset)(jax.random.split(kinit, n_episodes))
@@ -127,6 +134,9 @@ def evaluate(spec: EnvSpec, q_forward: Callable, params, key: jax.Array,
         return (s2, ret, live), None
 
     zeros = jnp.zeros((n_episodes,), jnp.float32)
-    (_, returns, _), _ = jax.lax.scan(body, (s, zeros, zeros + 1.0), None,
-                                      length=max_steps)
-    return jnp.mean(returns)
+    (_, returns, live), _ = jax.lax.scan(body, (s, zeros, zeros + 1.0), None,
+                                         length=max_steps)
+    finished = 1.0 - live                    # streams whose episode ended
+    n_finished = jnp.sum(finished)
+    finished_mean = jnp.sum(returns * finished) / jnp.maximum(n_finished, 1.0)
+    return jnp.where(n_finished > 0, finished_mean, jnp.mean(returns))

@@ -1,8 +1,22 @@
 """The paper's experiment: DQN with Concurrent Training + Synchronized
-Execution on a pixel environment.
+Execution on a pixel environment — run as a *population* of replicas.
 
   PYTHONPATH=src python -m repro.launch.rl_train --env catch --cycles 60 \
       --envs 8 --frame-size 10
+
+  # a 4-seed fleet with checkpoint/resume and per-replica metrics
+  PYTHONPATH=src python -m repro.launch.rl_train --env pong --seeds 4 \
+      --ckpt-dir runs/pong --metrics-jsonl runs/pong/metrics.jsonl --resume
+
+--seeds P vmaps the whole concurrent cycle over P replicas seeded
+[--seed, --seed + P) and shards them over visible devices
+(core/population.py); every run — including --seeds 1 — goes through
+the population layer, so a --seeds P fleet is bitwise-equal per replica
+to P independent --seeds 1 runs (tests/test_population.py). --ckpt-dir
+checkpoints the full population TrainerCarry every --ckpt-every cycles;
+--resume restarts from the latest checkpoint bitwise-identically to the
+uninterrupted run. --metrics-jsonl appends one JSON line per (cycle,
+replica).
 
 --frame-size 84 uses the exact Nature-CNN input geometry (84x84x4).
 The optimizer defaults to AdamW for fast convergence on the JAX envs;
@@ -11,16 +25,15 @@ tuned for 200M-frame Atari budgets.
 
 --variant {dqn,double,dueling,per,c51,noisy,rainbow_lite,rainbow}
 selects the off-policy variant preset (configs/dqn_nature.VARIANTS;
-matrix in docs/variants.md): double/dueling Q-learning, proportional
-prioritized replay over the segment-tree kernel, n-step returns, C51
-distributional heads over the categorical-projection kernel, NoisyNet
-exploration, or all of them (rainbow). --dryrun shrinks everything to a
-few seconds for the CI variant smoke job.
+matrix in docs/variants.md). --dryrun shrinks everything to a few
+seconds for the CI variant smoke job.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -32,9 +45,10 @@ from repro.configs.dqn_nature import (VARIANTS, NatureCNNConfig,
 from repro.envs import get_env
 from repro.models.nature_cnn import q_forward, q_init, q_logits
 from repro.optim import adamw, centered_rmsprop
-from repro.core.replay import replay_init
-from repro.core.synchronized import evaluate, sampler_init
-from repro.core.concurrent import TrainerCarry, make_concurrent_cycle, prepopulate
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.core.population import (eval_keys, make_population_cycle,
+                                   make_replica_init, population_evaluate,
+                                   population_init, replica_mesh, seed_array)
 
 
 def main(argv=None):
@@ -47,6 +61,21 @@ def main(argv=None):
     ap.add_argument("--paper-optimizer", action="store_true")
     ap.add_argument("--eval-every", type=int, default=20)
     ap.add_argument("--prepopulate", type=int, default=2048)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base replica seed (replica r runs seed+r)")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="population size P: the concurrent cycle is "
+                         "vmapped over P replicas and sharded over "
+                         "visible devices (core/population.py)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint the full population carry here")
+    ap.add_argument("--ckpt-every", type=int, default=20,
+                    help="cycles between checkpoints (with --ckpt-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --ckpt-dir "
+                         "(bitwise-identical to the uninterrupted run)")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="append per-(cycle, replica) metrics as JSON lines")
     ap.add_argument("--variant", default="dqn", choices=sorted(VARIANTS),
                     help="off-policy variant preset (configs/dqn_nature)")
     ap.add_argument("--kernel-backend", default="auto",
@@ -82,8 +111,6 @@ def main(argv=None):
         eps_anneal_steps=max(args.cycles * args.cycle_steps // 2, 1),
         discount=0.9, variant=variant)
 
-    key = jax.random.PRNGKey(0)
-    params = q_init(ncfg, spec.n_actions, key)
     ec = ExecConfig(compute_dtype=args.compute_dtype,
                     kernel_backend=args.kernel_backend)
     # trailing noise key (NoisyNet; None = μ-only, e.g. greedy eval)
@@ -94,30 +121,98 @@ def main(argv=None):
            else adamw(1e-3, weight_decay=0.0))
 
     fs = args.frame_size
-    replay = replay_init(dcfg.replay_capacity, (fs, fs, dcfg.frame_stack),
-                         prioritized=variant.prioritized)
-    sampler = sampler_init(spec, dcfg, key, fs)
-    replay, sampler = jax.jit(
-        lambda r, s: prepopulate(spec, qf, dcfg, r, s, dcfg.prepopulate, fs)
-    )(replay, sampler)
+    seeds = seed_array(args.seed, args.seeds)
+    init_one = make_replica_init(
+        spec, lambda k: q_init(ncfg, spec.n_actions, k), qf, opt, dcfg, fs)
 
-    cycle = jax.jit(make_concurrent_cycle(
+    start_cycle = 0
+    last = (latest_step(args.ckpt_dir)
+            if args.resume and args.ckpt_dir else None)
+    if last is not None:
+        # restore needs only the carry's tree *structure*, so build the
+        # template abstractly — no param init, no prepopulate scan
+        template = jax.eval_shape(lambda s: population_init(init_one, s),
+                                  seeds)
+        carry = restore_checkpoint(args.ckpt_dir, last, template)
+        start_cycle = last
+        print(f"resumed {args.ckpt_dir} at cycle {last}", flush=True)
+    else:
+        carry = jax.jit(lambda s: population_init(init_one, s))(seeds)
+
+    mesh = replica_mesh(args.seeds)
+    cycle = jax.jit(make_population_cycle(
         spec, qf, opt, dcfg, frame_size=fs,
-        kernel_backend=args.kernel_backend, q_logits=qlog))
-    ev = jax.jit(lambda p, k: evaluate(spec, qf, p, k, dcfg, n_episodes=64,
-                                       frame_size=fs, max_steps=64))
-    carry = TrainerCarry(params, opt.init(params), replay, sampler,
-                         jnp.int32(0))
+        kernel_backend=args.kernel_backend, q_logits=qlog, mesh=mesh))
+    # eval horizon follows the env's own episode bound, so long envs
+    # (pong/breakout run to 500 steps) are never truncation-biased
+    ev = jax.jit(lambda p, k: population_evaluate(
+        spec, qf, p, k, dcfg, n_episodes=64, frame_size=fs,
+        max_steps=spec.max_steps + 2))
+
+    metrics_f = None
+    seeds_host = [int(s) for s in jax.device_get(seeds)]
+    if args.metrics_jsonl:
+        os.makedirs(os.path.dirname(args.metrics_jsonl) or ".",
+                    exist_ok=True)
+        if os.path.exists(args.metrics_jsonl):
+            # the loop emits every cycle > start_cycle, so drop those
+            # rows (all of them on a fresh run) — the file must never
+            # hold two rows per (cycle, replica). A partially-written
+            # last line (the state an interrupted run leaves) is dropped
+            # the same way.
+            kept = []
+            with open(args.metrics_jsonl) as f:
+                for ln in f:
+                    try:
+                        row = json.loads(ln)
+                    except ValueError:
+                        continue
+                    if row.get("cycle", 0) <= start_cycle:
+                        kept.append(ln)
+            with open(args.metrics_jsonl, "w") as f:
+                f.writelines(kept)
+        metrics_f = open(args.metrics_jsonl, "a", buffering=1)
+
+    def emit(i, m, evals=None):
+        if metrics_f is None:
+            return
+        # one bulk device->host transfer per cycle, not 6 per replica
+        mh = jax.device_get(m)
+        steps = jax.device_get(carry.step)
+        evh = None if evals is None else jax.device_get(evals)
+        for r in range(args.seeds):
+            row = {"cycle": i + 1, "env": args.env, "variant": args.variant,
+                   "seed": seeds_host[r], "step": int(steps[r]),
+                   "loss": float(mh["loss"][r]),
+                   "reward": float(mh["reward"][r]),
+                   "episodes": float(mh["episodes"][r])}
+            if evh is not None:
+                row["eval"] = float(evh[r])
+            metrics_f.write(json.dumps(row) + "\n")
+
     t0 = time.time()
-    for i in range(args.cycles):
+    for i in range(start_cycle, args.cycles):
         carry, m = cycle(carry)
+        evals = None
         if (i + 1) % args.eval_every == 0 or i == args.cycles - 1:
-            r = float(ev(carry.params, jax.random.PRNGKey(i)))
-            sps = int(carry.step) / (time.time() - t0)
-            print(f"[{args.variant}] cycle {i+1:4d} steps {int(carry.step):7d} "
-                  f"eval {r:+.2f} loss {float(m['loss']):.4f} "
-                  f"eps {float(m['eps']):.2f} | {sps:.0f} env-steps/s",
-                  flush=True)
+            evals = ev(carry.params, eval_keys(seeds, i))
+            sps = (int(jnp.sum(carry.step))
+                   - args.seeds * start_cycle * args.cycle_steps) \
+                / max(time.time() - t0, 1e-9)
+            r_mean = float(jnp.mean(evals))
+            r_span = (float(jnp.min(evals)), float(jnp.max(evals)))
+            print(f"[{args.variant}] cycle {i+1:4d} "
+                  f"steps {int(carry.step[0]):7d} x{args.seeds} "
+                  f"eval {r_mean:+.2f} [{r_span[0]:+.2f},{r_span[1]:+.2f}] "
+                  f"loss {float(jnp.mean(m['loss'])):.4f} "
+                  f"eps {float(jnp.mean(m['eps'])):.2f} | "
+                  f"{sps:.0f} env-steps/s", flush=True)
+        emit(i, m, evals)
+        if args.ckpt_dir and ((i + 1) % args.ckpt_every == 0
+                              or i == args.cycles - 1):
+            save_checkpoint(args.ckpt_dir, i + 1, carry)
+    if metrics_f is not None:
+        metrics_f.close()
     if args.dryrun:
         print(f"DRYRUN OK variant={args.variant}", flush=True)
     return 0

@@ -4,6 +4,8 @@ import numpy as np
 
 from repro import compat
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.core.concurrent import TrainerCarry
+from repro.core.synchronized import SamplerState
 
 
 def test_roundtrip(tmp_path):
@@ -17,6 +19,31 @@ def test_roundtrip(tmp_path):
     got = restore_checkpoint(d, 7, tree)
     for a, b in zip(jax.tree_util.tree_leaves(got),
                     jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_namedtuple_carry_roundtrip(tmp_path):
+    """The PR-4 bugfix: NamedTuple nodes (TrainerCarry, SamplerState)
+    must restore by splatting fields — ``type(template)(vals)`` raised
+    for every NamedTuple, so no training carry could ever resume."""
+    sampler = SamplerState(
+        env_states={"ball": jnp.arange(4, dtype=jnp.int32)},
+        stack=jnp.ones((4, 10, 10, 2), jnp.uint8),
+        key=jax.random.PRNGKey(7))
+    carry = TrainerCarry(
+        params={"w": jnp.arange(6.0).reshape(2, 3)},
+        opt_state={"m": jnp.zeros((2, 3)), "step": jnp.int32(5)},
+        replay={"obs": jnp.zeros((8, 10, 10, 2), jnp.uint8),
+                "cursor": jnp.int32(3)},
+        sampler=sampler, step=jnp.int32(64), seed=jnp.int32(2))
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 64, carry)
+    got = restore_checkpoint(d, 64, carry)
+    assert isinstance(got, TrainerCarry)
+    assert isinstance(got.sampler, SamplerState)
+    la, lb = (jax.tree_util.tree_leaves(got), jax.tree_util.tree_leaves(carry))
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

@@ -21,7 +21,7 @@ from repro.core.dqn import make_update_fn
 from repro.core.replay import replay_init, replay_add_batch, replay_sample
 from repro.core.synchronized import sampler_init, sync_round
 from repro.core.concurrent import (TrainerCarry, make_concurrent_cycle,
-                                   prepopulate)
+                                   prepopulate, replica_key)
 from repro.optim.schedule import linear_epsilon
 
 FS = 10
@@ -64,7 +64,7 @@ def _oracle_cycle(spec, qf, opt, dcfg, carry):
         staged.append(tr)
     # trainer: C/F updates on the snapshot
     params, opt_state = carry.params, carry.opt_state
-    ktrain = jax.random.fold_in(jax.random.PRNGKey(17), carry.step)
+    ktrain = replica_key(17, carry.seed, carry.step)
     for k in jax.random.split(ktrain, C // F):
         batch = replay_sample(snapshot, k, dcfg.minibatch_size)
         params, opt_state, _ = update(params, target, opt_state, batch)

@@ -1,0 +1,266 @@
+"""Population-layer guarantees (core/population.py):
+
+1. a vmapped P-seed population run is **bitwise identical**, replica by
+   replica, to P independent single-seed runs (each an independent
+   population of 1 — exactly what ``rl_train --seeds 1`` executes);
+2. a mid-run checkpoint→restore reproduces the uninterrupted run
+   bitwise (the full TrainerCarry — params, opt state, replay, sampler
+   streams, step, seed — round-trips through repro.checkpoint);
+3. ``prepopulate`` lands at least the requested n transitions in 𝒟
+   even when W does not divide n and n-step aggregation shrinks the
+   flush (the pre-PR-4 under-fill bug);
+4. ``evaluate`` averages only episodes that finished within max_steps
+   (the pre-PR-4 truncation bias).
+
+Presets covered: ``dqn`` (scalar path) and ``rainbow`` (PER + n-step +
+C51 + noisy — every staging mechanism at once).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.config import DQNConfig
+from repro.configs.dqn_nature import (NatureCNNConfig, cnn_config_for,
+                                      get_variant)
+from repro.envs import get_env
+from repro.envs.games import EnvSpec
+from repro.models.nature_cnn import q_forward, q_init, q_logits
+from repro.optim import adamw
+from repro.core.concurrent import prepopulate
+from repro.core.population import (eval_keys, make_population_cycle,
+                                   make_replica_init, population_evaluate,
+                                   population_init, replica_mesh, seed_array)
+from repro.core.replay import replay_init
+from repro.core.synchronized import evaluate, sampler_init
+
+FS = 10
+
+
+def _fixture(name, C=16, W=4):
+    variant = get_variant(name)
+    spec = get_env("catch")
+    ncfg = cnn_config_for(variant, NatureCNNConfig(
+        frame_size=FS, frame_stack=2, convs=((8, 3, 1),), hidden=16,
+        n_actions=spec.n_actions))
+    dcfg = DQNConfig(minibatch_size=8, replay_capacity=128,
+                     target_update_period=C, train_period=4,
+                     prepopulate=32, n_envs=W, frame_stack=2,
+                     eps_anneal_steps=1000, variant=variant)
+    qf = lambda p, o, k=None: q_forward(p, o, ncfg, noise_key=k)  # noqa: E731
+    qlog = ((lambda p, o, k=None: q_logits(p, o, ncfg, noise_key=k))
+            if variant.distributional else None)
+    opt = adamw(1e-3, weight_decay=0.0)
+    init_one = make_replica_init(
+        spec, lambda k: q_init(ncfg, spec.n_actions, k), qf, opt, dcfg, FS)
+    cycle = jax.jit(make_population_cycle(spec, qf, opt, dcfg, frame_size=FS,
+                                          q_logits=qlog))
+    return spec, dcfg, qf, init_one, cycle
+
+
+def _assert_replica_equals(pop_tree, r, single_tree):
+    """Leaf-by-leaf: pop_tree[leaf][r] == single_tree[leaf][0], bitwise."""
+    lp = jax.tree_util.tree_leaves(pop_tree)
+    ls = jax.tree_util.tree_leaves(single_tree)
+    assert len(lp) == len(ls)
+    for p, s in zip(lp, ls):
+        np.testing.assert_array_equal(np.asarray(p)[r], np.asarray(s)[0])
+
+
+# rainbow populations are the heaviest compiles in the suite; they ride
+# the slow marker (the CI slow job still runs them every push)
+PRESET_PARAMS = ["dqn", pytest.param("rainbow", marks=pytest.mark.slow)]
+
+
+@pytest.mark.parametrize("name", PRESET_PARAMS)
+def test_population_matches_independent_runs(name):
+    """Acceptance: a vmapped 4-seed population produces per-replica
+    state bitwise-equal to 4 independent single-seed runs."""
+    _, _, _, init_one, cycle = _fixture(name)
+    pop = population_init(init_one, seed_array(0, 4))
+    for _ in range(2):
+        pop, _ = cycle(pop)
+    for r in range(4):
+        single = population_init(init_one, seed_array(r, 1))
+        for _ in range(2):
+            single, _ = cycle(single)
+        _assert_replica_equals(pop.params, r, single.params)
+        _assert_replica_equals(pop.replay, r, single.replay)
+        _assert_replica_equals(pop.sampler, r, single.sampler)
+        _assert_replica_equals(pop.opt_state, r, single.opt_state)
+
+
+@pytest.mark.parametrize("name", PRESET_PARAMS)
+def test_checkpoint_resume_bitwise(name, tmp_path):
+    """Acceptance: mid-run checkpoint → restore → continue equals the
+    uninterrupted run bitwise, for the whole population carry."""
+    _, _, _, init_one, cycle = _fixture(name)
+    seeds = seed_array(0, 2)
+    ckpt = str(tmp_path / "ckpt")
+
+    straight = population_init(init_one, seeds)
+    for _ in range(3):
+        straight, _ = cycle(straight)
+
+    pop = population_init(init_one, seeds)
+    for _ in range(2):
+        pop, _ = cycle(pop)
+    save_checkpoint(ckpt, 2, pop)
+    assert latest_step(ckpt) == 2
+
+    template = population_init(init_one, seeds)   # fresh state, same shapes
+    resumed = restore_checkpoint(ckpt, 2, template)
+    resumed, _ = cycle(resumed)
+
+    la = jax.tree_util.tree_leaves(straight)
+    lb = jax.tree_util.tree_leaves(resumed)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_prepopulate_fills_at_least_n():
+    """rounds = n // W truncated (the seed bug) and n-step aggregation
+    shrank the flush further; now ceil(n/W)·W >= n transitions land."""
+    spec = get_env("catch")
+    for name, n, W in (("rainbow", 32, 4), ("rainbow", 33, 4),
+                       ("dqn", 33, 4), ("dqn", 32, 4)):
+        variant = get_variant(name)
+        dcfg = DQNConfig(minibatch_size=8, replay_capacity=256,
+                         target_update_period=16, train_period=4,
+                         prepopulate=n, n_envs=W, frame_stack=2,
+                         eps_anneal_steps=1000, variant=variant)
+        qf = lambda p, o: jnp.zeros((o.shape[0], spec.n_actions))  # noqa: E731
+        replay = replay_init(dcfg.replay_capacity, (FS, FS, 2),
+                             prioritized=variant.prioritized)
+        sampler = sampler_init(spec, dcfg, jax.random.PRNGKey(0), FS)
+        replay, _ = prepopulate(spec, qf, dcfg, replay, sampler, n, FS)
+        filled = int(replay["size"])
+        assert filled >= n, (name, n, W, filled)
+        assert filled == -(-n // W) * W, (name, n, W, filled)
+
+
+def _threshold_spec():
+    """A deterministic env for the truncation test: reward 1 per step;
+    streams terminate at t == 2 or t == 10 depending on a reset coin."""
+    def reset(key):
+        thr = jnp.where(jax.random.bernoulli(key), 2, 10)
+        return {"t": jnp.int32(0), "thr": jnp.asarray(thr, jnp.int32)}
+
+    def step(s, a, key):
+        t = s["t"] + 1
+        done = t >= s["thr"]
+        return ({"t": t, "thr": s["thr"]}, jnp.float32(1.0), done)
+
+    def render(s):
+        return jnp.zeros((FS, FS, 1), jnp.float32)
+
+    return EnvSpec("thresh", 2, 1, 10, reset, step, render, size=FS)
+
+
+def test_evaluate_counts_only_finished_episodes():
+    """Streams cut off mid-episode must not enter the mean: with reward
+    1/step, finished streams return exactly their threshold (2) while
+    truncated streams hold max_steps partial reward — the old mean mixed
+    them."""
+    spec = _threshold_spec()
+    dcfg = DQNConfig(minibatch_size=8, replay_capacity=128,
+                     target_update_period=16, train_period=4,
+                     n_envs=4, frame_stack=2, eval_eps=0.05)
+    qf = lambda p, o: jnp.zeros((o.shape[0], spec.n_actions))  # noqa: E731
+    got = evaluate(spec, qf, None, jax.random.PRNGKey(0), dcfg,
+                   n_episodes=16, frame_size=FS, max_steps=5)
+    # every finished episode returned exactly 2.0; truncated streams
+    # (thr=10) accumulated 5.0 and are excluded
+    assert float(got) == 2.0
+    # nothing finishes within 1 step -> partial-return fallback (1.0/step)
+    got_none = evaluate(spec, qf, None, jax.random.PRNGKey(0), dcfg,
+                        n_episodes=16, frame_size=FS, max_steps=1)
+    assert float(got_none) == 1.0
+
+
+def test_population_evaluate_shapes_and_keys():
+    _, dcfg, qf, init_one, cycle = _fixture("dqn")
+    seeds = seed_array(3, 2)
+    pop = population_init(init_one, seeds)
+    spec = get_env("catch")
+    ks = eval_keys(seeds, 0)
+    assert ks.shape[0] == 2
+    # distinct replicas draw distinct eval streams
+    assert not np.array_equal(np.asarray(ks[0]), np.asarray(ks[1]))
+    # and the same (seed, step) reproduces the same keys after a resume
+    np.testing.assert_array_equal(np.asarray(ks),
+                                  np.asarray(eval_keys(seeds, 0)))
+    ev = population_evaluate(spec, qf, pop.params, ks, dcfg,
+                             n_episodes=8, frame_size=FS)
+    assert ev.shape == (2,)
+
+
+def test_replica_mesh_divisibility():
+    # single-device hosts never shard (vmap alone is optimal)
+    assert replica_mesh(4) is None or jax.device_count() > 1
+    # divisibility fallback: a 3-replica population on d devices picks
+    # the largest divisor (1 on a 1-device host -> None)
+    assert replica_mesh(1) is None
+
+
+@pytest.mark.slow
+def test_population_sharded_matches_vmap_subprocess(tmp_path):
+    """The shard_map path: on a forced 4-device host, a sharded 4-replica
+    population cycle equals the plain vmapped one bitwise."""
+    import os
+    import subprocess
+    import sys
+
+    prog = tmp_path / "prog.py"
+    prog.write_text("""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.config import DQNConfig
+from repro.configs.dqn_nature import NatureCNNConfig, cnn_config_for, get_variant
+from repro.envs import get_env
+from repro.models.nature_cnn import q_forward, q_init
+from repro.optim import adamw
+from repro.core.population import (make_population_cycle, make_replica_init,
+                                   population_init, replica_mesh, seed_array)
+
+assert jax.device_count() >= 4, jax.device_count()
+FS = 10
+variant = get_variant("dqn")
+spec = get_env("catch")
+ncfg = cnn_config_for(variant, NatureCNNConfig(
+    frame_size=FS, frame_stack=2, convs=((8, 3, 1),), hidden=16,
+    n_actions=spec.n_actions))
+dcfg = DQNConfig(minibatch_size=8, replay_capacity=128,
+                 target_update_period=16, train_period=4, prepopulate=32,
+                 n_envs=4, frame_stack=2, eps_anneal_steps=1000,
+                 variant=variant)
+qf = lambda p, o, k=None: q_forward(p, o, ncfg, noise_key=k)
+opt = adamw(1e-3, weight_decay=0.0)
+init_one = make_replica_init(spec, lambda k: q_init(ncfg, spec.n_actions, k),
+                             qf, opt, dcfg, FS)
+pop = population_init(init_one, seed_array(0, 4))
+mesh = replica_mesh(4)
+assert mesh is not None
+sharded = jax.jit(make_population_cycle(spec, qf, opt, dcfg, frame_size=FS,
+                                        mesh=mesh))
+plain = jax.jit(make_population_cycle(spec, qf, opt, dcfg, frame_size=FS))
+a, _ = sharded(pop)
+b, _ = plain(pop)
+for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+print("SHARDED OK")
+""")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        flags = (flags + " --xla_force_host_platform_device_count=4").strip()
+    env = dict(os.environ, PYTHONPATH="src", XLA_FLAGS=flags)
+    out = subprocess.run([sys.executable, str(prog)], cwd=os.getcwd(),
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "SHARDED OK" in out.stdout

@@ -44,7 +44,13 @@ def test_reduced_forward_shapes_and_finite(arch):
     assert bool(jnp.isfinite(aux))
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# compile-heavy train steps (30-45s each on CI CPU) ride the slow marker
+_HEAVY_TRAIN = {"zamba2-2.7b", "llama-3.2-vision-11b"}
+TRAIN_PARAMS = [pytest.param(a, marks=pytest.mark.slow)
+                if a in _HEAVY_TRAIN else a for a in ARCH_IDS]
+
+
+@pytest.mark.parametrize("arch", TRAIN_PARAMS)
 def test_reduced_train_step(arch):
     cfg = reduced_config(arch)
     step, opt = make_train_step(cfg, EC, TrainConfig(learning_rate=1e-3,
