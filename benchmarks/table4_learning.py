@@ -14,88 +14,72 @@ env carries a vmapped population of S seed replicas
 instead of the old Python loop of 4 single-seed runs. Scores are
 averaged over seeds (± the seed spread), which is what the population
 axis buys: seed-robust numbers at one-program cost.
+
+Since PR 5 the fleet is **declared, not wired**: each env's stage is an
+`ExperimentSpec` built by :func:`fleet_spec` and constructed through
+``repro.api.build_trainer`` — the same single construction path the
+launchers use — so the benchmark exercises exactly what
+``rl_train --spec`` runs. ``fleet_spec(env).to_json()`` is a committed
+artifact away from re-running any stage standalone.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List
+from typing import Dict, List
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.config import DQNConfig
-from repro.configs.dqn_nature import NatureCNNConfig
-from repro.envs import get_env
-from repro.models.nature_cnn import q_forward, q_init
-from repro.optim import adamw
-from repro.core.population import (eval_keys, make_population_cycle,
-                                   make_replica_init, population_evaluate,
-                                   population_init, seed_array)
+from repro.api import (AlgoSpec, ExperimentSpec, ScheduleSpec, Trainer,
+                       build_trainer)
 
-FS = 10
 ENV_NAMES = ("catch", "pong", "breakout", "seeker")
 # best-achievable mean returns (optimal play) used for normalization
 OPTIMAL = {"catch": 1.0, "pong": 20.0, "breakout": 15.0, "seeker": 3.0}
 
 
-@dataclasses.dataclass
-class _Stage:
-    cycle: Callable
-    evaluate: Callable
-    seeds: jax.Array
-    init_one: Callable
-
-
-def _build_stage(env_name: str, cycles: int, seeds: int,
-                 base_seed: int) -> _Stage:
-    spec = get_env(env_name)
-    ncfg = NatureCNNConfig(frame_size=FS, frame_stack=2,
-                           convs=((16, 3, 1), (16, 3, 1)), hidden=64,
-                           n_actions=spec.n_actions)
-    dcfg = DQNConfig(minibatch_size=32, replay_capacity=16384,
-                     target_update_period=256, train_period=2,
-                     prepopulate=2048, n_envs=8, frame_stack=2,
-                     eps_anneal_steps=cycles * 128, discount=0.9)
-    qf = lambda p, o, k=None: q_forward(p, o, ncfg)  # noqa: E731
-    opt = adamw(1e-3, weight_decay=0.0)
-    init_one = make_replica_init(
-        spec, lambda k: q_init(ncfg, spec.n_actions, k), qf, opt, dcfg, FS)
-    s = seed_array(base_seed, seeds)
-    cycle = make_population_cycle(spec, qf, opt, dcfg, frame_size=FS)
-    ev = lambda p, k: population_evaluate(  # noqa: E731
-        spec, qf, p, k, dcfg, n_episodes=64, frame_size=FS,
-        max_steps=spec.max_steps + 2)
-    return _Stage(cycle, ev, s, init_one)
+def fleet_spec(env_name: str, cycles: int, seeds: int,
+               base_seed: int) -> ExperimentSpec:
+    """One env's stage of the Table-4 fleet as a declarative spec
+    (population mode, the `small` 10x10 net, the PR-4 hyperparameters)."""
+    return ExperimentSpec(
+        env=env_name, mode="population", seeds=seeds, seed=base_seed,
+        envs=8, frame_size=10, net="small",
+        schedule=ScheduleSpec(cycles=cycles, cycle_steps=256,
+                              prepopulate=2048, eval_every=10,
+                              eval_episodes=64),
+        algo=AlgoSpec(minibatch_size=32, replay_capacity=16384,
+                      train_period=2, discount=0.9))
 
 
 def train_fleet(cycles: int = 40, seeds: int = 2,
                 base_seed: int = 0) -> List[Dict]:
     """Train all 4 envs × ``seeds`` replicas as one jitted program and
     return one row per env with seed-averaged normalized scores."""
-    stages = {e: _build_stage(e, cycles, seeds, base_seed)
-              for e in ENV_NAMES}
+    trainers: Dict[str, Trainer] = {
+        e: build_trainer(fleet_spec(e, cycles, seeds, base_seed))
+        for e in ENV_NAMES}
 
-    carries = jax.jit(lambda sd: {
-        e: population_init(stages[e].init_one, sd[e]) for e in ENV_NAMES
-    })({e: stages[e].seeds for e in ENV_NAMES})
+    carries = {e: trainers[e].init_carry() for e in ENV_NAMES}
 
     # ONE jitted super-step advancing every env's population: 4 × S
-    # concurrent C-cycles per dispatch, zero Python between them.
+    # concurrent C-cycles per dispatch, zero Python between them (the
+    # per-trainer jitted cycles inline into the fleet jit).
     fleet_cycle = jax.jit(lambda cs: dict(
-        zip(ENV_NAMES, (stages[e].cycle(cs[e]) for e in ENV_NAMES))))
+        zip(ENV_NAMES, (trainers[e].cycle(cs[e]) for e in ENV_NAMES))))
     fleet_eval = jax.jit(lambda cs, i: {
-        e: stages[e].evaluate(cs[e].params, eval_keys(stages[e].seeds, i))
+        e: trainers[e].eval(cs[e], trainers[e].eval_key(i))
         for e in ENV_NAMES})
 
     random_scores = {e: np.asarray(v)
                      for e, v in fleet_eval(carries, -1).items()}
     best = {e: np.full(seeds, -1e9) for e in ENV_NAMES}
+    # eval cadence comes from the declared schedule, not a second copy
+    eval_every = next(iter(trainers.values())).spec.schedule.eval_every
     for i in range(cycles):
         out = fleet_cycle(carries)
         carries = {e: out[e][0] for e in ENV_NAMES}
-        if (i + 1) % 10 == 0:                 # periodic eval, keep the best
+        if (i + 1) % eval_every == 0:         # periodic eval, keep the best
             for e, v in fleet_eval(carries, i).items():
                 best[e] = np.maximum(best[e], np.asarray(v))
 

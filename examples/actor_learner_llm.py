@@ -13,7 +13,7 @@ import jax
 
 from repro.configs import reduced_config
 from repro.core.actor_learner import ALConfig, make_actor_learner
-from repro.models.layers import ExecConfig
+from repro.config import ExecConfig
 
 arch = sys.argv[1] if len(sys.argv) > 1 else "starcoder2-3b"
 cfg = reduced_config(arch)

@@ -57,7 +57,7 @@ from repro.config import TrainConfig
 from repro.configs import reduced_config
 from repro.data import SyntheticLM
 from repro.models import transformer as T
-from repro.models.layers import ExecConfig
+from repro.config import ExecConfig
 from repro.launch.steps import make_train_step
 
 print("\n=== 2) LLM path: granite-moe (reduced) on the synthetic stream ===")

@@ -1,0 +1,32 @@
+"""Unified Experiment API: declarative `ExperimentSpec` + the common
+`Trainer` protocol over every execution mode.
+
+    from repro.api import ExperimentSpec, build_trainer
+
+    spec = ExperimentSpec.from_preset("rainbow", seeds=4)
+    trainer = build_trainer(spec)          # mode registry: TRAINERS
+    carry = trainer.init_carry()
+    carry, metrics = trainer.cycle(carry)  # metrics lead with replicas
+
+See docs/experiment_api.md for the spec schema and the protocol
+contract; examples/specs/ holds committed golden specs.
+"""
+
+from repro.api.spec import (AlgoSpec, CheckpointSpec, ExperimentSpec,
+                            MetricsSpec, MODES, RUN_SPEC_FILENAME,
+                            ScheduleSpec, SpecCompatError,
+                            check_resume_compat, load_run_spec,
+                            save_run_spec, spec_compat_diff)
+from repro.api.trainers import (TRAINERS, Trainer, build_trainer,
+                                register_trainer)
+
+__all__ = [
+    # spec surface
+    "ExperimentSpec", "ScheduleSpec", "AlgoSpec", "CheckpointSpec",
+    "MetricsSpec", "MODES",
+    # trainer surface
+    "Trainer", "TRAINERS", "register_trainer", "build_trainer",
+    # resume-compatibility guard
+    "SpecCompatError", "spec_compat_diff", "check_resume_compat",
+    "save_run_spec", "load_run_spec", "RUN_SPEC_FILENAME",
+]

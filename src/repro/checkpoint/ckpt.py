@@ -62,6 +62,24 @@ def restore_checkpoint(ckpt_dir: str, step: int, template: Any,
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
     with np.load(path) as data:
         arrays = {k: data[k] for k in data.files}
+    expected = {p for p, _ in _flatten(template)}
+    if expected != set(arrays):
+        # a structural mismatch would otherwise surface as an opaque
+        # KeyError deep inside _unflatten_into; name the paths instead
+        # (launchers additionally guard with the stored ExperimentSpec —
+        # see repro.api.check_resume_compat — which yields a field-level
+        # diff before the restore is even attempted)
+        missing = sorted(expected - set(arrays))
+        extra = sorted(set(arrays) - expected)
+        detail = []
+        if missing:
+            detail.append(f"missing from checkpoint: {missing[:8]}")
+        if extra:
+            detail.append(f"not in template: {extra[:8]}")
+        raise ValueError(
+            f"checkpoint {path} does not match the restore template "
+            f"({'; '.join(detail)}) — was it written by a run with a "
+            "different spec?")
     tree = _unflatten_into(template, arrays)
     if shardings is not None:
         tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)

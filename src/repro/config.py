@@ -10,10 +10,12 @@ is repeated ``n_superblocks`` times and executed with ``lax.scan`` over the
 repeats, so the lowered HLO size is independent of depth.
 
 This module is the public configuration surface: import the dataclasses
-below from ``repro.config`` (``ExecConfig`` is also re-exported from
-``repro.models.layers`` for the historical path). The DQN variant
-family (``VariantConfig``) is documented field-by-field in
-docs/variants.md.
+below from ``repro.config``. (The historical re-export of ``ExecConfig``
+from ``repro.models.layers`` is deprecated and warns — see that
+module's ``__getattr__``.) The DQN variant family (``VariantConfig``)
+is documented field-by-field in docs/variants.md; the declarative
+experiment layer that composes these configs into one serializable run
+description lives in ``repro.api`` (docs/experiment_api.md).
 """
 
 from __future__ import annotations

@@ -37,6 +37,39 @@ class NatureCNNConfig:
 
 CONFIG = NatureCNNConfig()
 
+# ---------------------------------------------------------------------------
+# Q-network geometry presets. Historically rl_train and dryrun each
+# hand-built their NatureCNNConfig (and drifted); the ExperimentSpec
+# (repro.api) names a preset instead and both launchers resolve it here.
+# ---------------------------------------------------------------------------
+NET_PRESETS = ("auto", "nature", "small", "tiny")
+
+
+def cnn_geometry(net: str, frame_size: int, n_actions: int) -> NatureCNNConfig:
+    """The base (variant-free) network geometry a preset names.
+
+    ``auto`` picks by input geometry: 10x10 MinAtar grids get the
+    2-conv ``small`` net, 84x84 the exact Nature stack. ``tiny`` is the
+    single-conv net the dryrun/test harnesses compile (seconds, not
+    minutes). Apply :func:`cnn_config_for` on top for the variant's
+    head selection."""
+    if net == "auto":
+        net = "small" if frame_size == 10 else "nature"
+    if net == "nature":
+        return NatureCNNConfig(
+            frame_size=frame_size, frame_stack=4,
+            convs=((32, 8, 4), (64, 4, 2), (64, 3, 1)), hidden=512,
+            n_actions=n_actions)
+    if net == "small":
+        return NatureCNNConfig(
+            frame_size=frame_size, frame_stack=2,
+            convs=((16, 3, 1), (16, 3, 1)), hidden=64, n_actions=n_actions)
+    if net == "tiny":
+        return NatureCNNConfig(
+            frame_size=frame_size, frame_stack=2, convs=((8, 3, 1),),
+            hidden=16, n_actions=n_actions)
+    raise KeyError(f"unknown net preset {net!r}; available: {NET_PRESETS}")
+
 
 def cnn_config_for(variant: VariantConfig, base: NatureCNNConfig = CONFIG,
                    **overrides) -> NatureCNNConfig:

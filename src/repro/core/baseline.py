@@ -13,6 +13,11 @@ runner (benchmarks/table1_speed.py) where per-stream device transactions
 are real; inside one jitted program every variant would be batched
 anyway, so this module fixes W=n_envs with a batched policy but keeps
 the *sequential* sample->train->sample dependency structure.
+
+The ``baseline`` and ``synchronized`` entries of the ``repro.api``
+trainer registry wrap this chunk (docs/experiment_api.md); its metrics
+carry the same keys as the concurrent cycle's (loss/reward/episodes/
+eps) so launchers log every mode through one code path.
 """
 
 from __future__ import annotations
@@ -48,7 +53,13 @@ def make_baseline_chunk(spec: EnvSpec, q_forward: Callable, opt,
     F = cfg.train_period
     C = cfg.target_update_period
     steps = chunk_steps or C
-    assert steps % (F * W) == 0 or steps % F == 0
+    # Each update group runs F//W batched W-env rounds, so F must be a
+    # positive multiple of W or the chunk would silently run W/F times
+    # more env steps than ``steps`` claims (sub-round update cadence
+    # cannot be expressed in the batched formulation — the host runner
+    # models that regime).
+    assert F % W == 0, (F, W)
+    assert steps % F == 0, (steps, F)
     groups = max(steps // F, 1)
     groups_per_target = max(C // F, 1)
     update_fn = make_update_fn(q_forward, opt, cfg)
@@ -66,9 +77,9 @@ def make_baseline_chunk(spec: EnvSpec, q_forward: Callable, opt,
             # standard DQN: experiences enter 𝒟 immediately
             flat = {k: v for k, v in tr.items()}
             replay = replay_add_batch(replay, flat)
-            return (s, replay), tr["reward"]
+            return (s, replay), (tr["reward"], tr["done"])
 
-        (sampler, replay), rewards = jax.lax.scan(
+        (sampler, replay), (rewards, dones) = jax.lax.scan(
             sample_body, (carry.sampler, carry.replay),
             jnp.arange(rounds_per_group))
 
@@ -86,11 +97,17 @@ def make_baseline_chunk(spec: EnvSpec, q_forward: Callable, opt,
 
         new = BaselineCarry(params, target, opt_state, replay, sampler,
                             carry.step + rounds_per_group * W, group)
-        return new, {"loss": loss, "reward": jnp.sum(rewards)}
+        return new, {"loss": loss, "reward": jnp.sum(rewards),
+                     "episodes": jnp.sum(dones)}
 
     def chunk(carry: BaselineCarry):
+        # ε at the chunk boundary, mirroring the concurrent cycle's
+        # metric so launchers log all modes through one code path
+        eps0 = eps_fn(carry.step)
         carry, ms = jax.lax.scan(group_body, carry, None, length=groups)
-        return carry, {k: jnp.mean(v) if k == "loss" else jnp.sum(v)
-                       for k, v in ms.items()}
+        out = {k: jnp.mean(v) if k == "loss" else jnp.sum(v)
+               for k, v in ms.items()}
+        out["eps"] = eps0
+        return carry, out
 
     return chunk

@@ -34,7 +34,10 @@ distinct seeds (core/population.py) runs decorrelated replicas. C51
 losses ride the same PER staging with cross-entropy in place of |td|.
 Every variant therefore keeps the paper's snapshot-𝒟 determinism
 guarantee — locked in by tests/test_variants.py. docs/architecture.md
-has the cycle timeline.
+has the cycle timeline. Launchers construct this cycle through the
+``concurrent`` / ``population`` entries of the ``repro.api`` trainer
+registry (docs/experiment_api.md) rather than calling
+``make_concurrent_cycle`` directly.
 """
 
 from __future__ import annotations
@@ -74,6 +77,13 @@ def replica_key(tag: int, seed: jax.Array, step: jax.Array) -> jax.Array:
     key, so every stream is a pure function of (tag, seed, step)."""
     return jax.random.fold_in(
         jax.random.fold_in(jax.random.PRNGKey(tag), seed), step)
+
+
+# The evaluation RNG stream tag, shared by population.eval_keys and the
+# repro.api trainers so a population eval and a single-replica eval with
+# the same (seed, cycle index) draw identical keys (the concurrent ==
+# 1-seed-population bitwise guarantee depends on this single constant).
+EVAL_STREAM_TAG = 29
 
 
 def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,

@@ -34,7 +34,8 @@ from repro.core.replay import stratified_indices
 from repro.kernels import ops as kops
 from repro.kernels.segment_tree import next_pow2, tree_build
 from repro.models import transformer as T
-from repro.models.layers import ExecConfig, softmax_cross_entropy
+from repro.config import ExecConfig
+from repro.models.layers import softmax_cross_entropy
 from repro.optim import adamw
 from repro.optim.base import apply_updates
 

@@ -23,6 +23,11 @@ guarantees, locked in by tests/test_population.py:
   ``repro.checkpoint`` (the carry is the whole training state: params,
   optimizer, replay, sampler streams, step and seed).
 
+Launchers and benchmarks construct this layer through the
+``population`` entry of the ``repro.api`` trainer registry
+(``build_trainer(spec)``; docs/experiment_api.md) — the functions below
+are the mechanism, the spec is the interface.
+
 When several devices are visible, the replica axis is sharded over a
 1-D ``replica`` mesh via the ``repro.compat`` shard_map shim — each
 device advances P/D replicas with zero cross-device communication (the
@@ -39,8 +44,9 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.config import DQNConfig
-from repro.core.concurrent import (TrainerCarry, make_concurrent_cycle,
-                                   prepopulate, replica_key)
+from repro.core.concurrent import (EVAL_STREAM_TAG, TrainerCarry,
+                                   make_concurrent_cycle, prepopulate,
+                                   replica_key)
 from repro.core.replay import replay_init
 from repro.core.synchronized import evaluate, sampler_init
 from repro.envs.games import EnvSpec
@@ -134,7 +140,8 @@ def eval_keys(seeds: jax.Array, step) -> jax.Array:
     """Per-replica evaluation keys: a dedicated stream tag folded with
     each replica's seed and the eval step counter, so eval RNG never
     collides with the training streams and resumes reproducibly."""
-    return jax.vmap(lambda s: replica_key(29, s, jnp.asarray(step)))(
+    return jax.vmap(
+        lambda s: replica_key(EVAL_STREAM_TAG, s, jnp.asarray(step)))(
         jnp.asarray(seeds, jnp.int32))
 
 

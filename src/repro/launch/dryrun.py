@@ -28,9 +28,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.config import INPUT_SHAPES, TrainConfig
+from repro.config import ExecConfig, INPUT_SHAPES, TrainConfig
 from repro.configs import ARCH_IDS, get_config
-from repro.models.layers import ExecConfig
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import (decode_cache_len, decode_is_ring, input_specs,
                                 needs_memory)
@@ -143,53 +142,43 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
     return rec
 
 
+def dqn_variant_spec(variant_name: str, kernel_backend: str,
+                     mode: str = "concurrent"):
+    """The dryrun-sized ExperimentSpec for one variant preset: the
+    ``tiny`` network on catch, a 32-step cycle — seconds to compile.
+    Shared with tests so the dryrun grid and the test harness cannot
+    drift."""
+    from repro.api import AlgoSpec, ExperimentSpec, ScheduleSpec
+    from repro.configs.dqn_nature import get_variant
+
+    return ExperimentSpec(
+        env="catch", mode=mode, variant=get_variant(variant_name),
+        envs=4, frame_size=10, net="tiny",
+        schedule=ScheduleSpec(cycles=1, cycle_steps=32, prepopulate=64,
+                              eval_every=1, eval_episodes=8),
+        algo=AlgoSpec(minibatch_size=8, replay_capacity=512,
+                      train_period=4, eps_anneal_steps=1000),
+        exec=ExecConfig(compute_dtype="float32",
+                        kernel_backend=kernel_backend))
+
+
 def lower_dqn_variant(variant_name: str, kernel_backend: str) -> Dict[str, Any]:
     """Lower + compile one off-policy DQN variant's jitted C-cycle (the
     concurrent super-step, including the PER segment-tree path) and
     extract the same roofline terms as the LLM shapes. Single-device:
-    the DQN reproduction targets commodity hosts, not the pod mesh."""
-    import jax.numpy as jnp
+    the DQN reproduction targets commodity hosts, not the pod mesh.
+    Construction goes through ``repro.api.build_trainer`` — the same
+    path as rl_train — so what the dryrun proves compilable is exactly
+    what the launcher runs."""
+    from repro.api import build_trainer
 
-    from repro.config import DQNConfig
-    from repro.configs.dqn_nature import (NatureCNNConfig, cnn_config_for,
-                                          get_variant)
-    from repro.core.concurrent import (TrainerCarry, make_concurrent_cycle,
-                                       prepopulate)
-    from repro.core.replay import replay_init
-    from repro.core.synchronized import sampler_init
-    from repro.envs import get_env
-    from repro.models.nature_cnn import q_forward, q_init, q_logits
-    from repro.optim import adamw
-
-    variant = get_variant(variant_name)
-    FS = 10
-    spec = get_env("catch")
-    ncfg = cnn_config_for(variant, NatureCNNConfig(
-        frame_size=FS, frame_stack=2, convs=((8, 3, 1),), hidden=16,
-        n_actions=spec.n_actions))
-    dcfg = DQNConfig(minibatch_size=8, replay_capacity=512,
-                     target_update_period=32, train_period=4, n_envs=4,
-                     frame_stack=2, eps_anneal_steps=1000, variant=variant)
-    key = jax.random.PRNGKey(0)
-    params = q_init(ncfg, spec.n_actions, key)
-    qf = lambda p, o, k=None: q_forward(p, o, ncfg, noise_key=k)
-    qlog = ((lambda p, o, k=None: q_logits(p, o, ncfg, noise_key=k))
-            if variant.distributional else None)
-    opt = adamw(1e-3, weight_decay=0.0)
-    replay = replay_init(dcfg.replay_capacity, (FS, FS, 2),
-                         prioritized=variant.prioritized)
-    sampler = sampler_init(spec, dcfg, key, FS)
-    replay, sampler = prepopulate(spec, qf, dcfg, replay, sampler, 64, FS)
-    carry = TrainerCarry(params, opt.init(params), replay, sampler,
-                         jnp.int32(0))
+    trainer = build_trainer(dqn_variant_spec(variant_name, kernel_backend))
+    carry = trainer.init_carry()
 
     rec: Dict[str, Any] = {"arch": "dqn", "shape": f"variant_{variant_name}",
                            "mesh": "1x1", "n_chips": 1}
-    cycle = make_concurrent_cycle(spec, qf, opt, dcfg, frame_size=FS,
-                                  kernel_backend=kernel_backend,
-                                  q_logits=qlog)
     t0 = time.time()
-    lowered = jax.jit(cycle).lower(carry)
+    lowered = trainer.cycle.lower(carry)
     rec["lower_s"] = round(time.time() - t0, 2)
     t0 = time.time()
     compiled = lowered.compile()

@@ -1,6 +1,11 @@
-"""The paper's experiment: DQN with Concurrent Training + Synchronized
-Execution on a pixel environment — run as a *population* of replicas.
+"""The paper's experiment, driven by a declarative `ExperimentSpec`.
 
+  # everything from one committed spec file (repro.api)
+  PYTHONPATH=src python -m repro.launch.rl_train \
+      --spec examples/specs/rainbow_fleet.json
+
+  # the same run from flags (flags override spec fields; no --spec
+  # means overriding the built-in default spec)
   PYTHONPATH=src python -m repro.launch.rl_train --env catch --cycles 60 \
       --envs 8 --frame-size 10
 
@@ -8,20 +13,32 @@ Execution on a pixel environment — run as a *population* of replicas.
   PYTHONPATH=src python -m repro.launch.rl_train --env pong --seeds 4 \
       --ckpt-dir runs/pong --metrics-jsonl runs/pong/metrics.jsonl --resume
 
---seeds P vmaps the whole concurrent cycle over P replicas seeded
-[--seed, --seed + P) and shards them over visible devices
-(core/population.py); every run — including --seeds 1 — goes through
-the population layer, so a --seeds P fleet is bitwise-equal per replica
-to P independent --seeds 1 runs (tests/test_population.py). --ckpt-dir
-checkpoints the full population TrainerCarry every --ckpt-every cycles;
---resume restarts from the latest checkpoint bitwise-identically to the
-uninterrupted run. --metrics-jsonl appends one JSON line per (cycle,
-replica).
+This launcher is a thin shim over ``repro.api``: it resolves
+(spec file → flag overrides) into one `ExperimentSpec`, builds the
+trainer through ``build_trainer`` (the single construction path shared
+with `launch/dryrun.py --arch dqn` and `benchmarks/table4_learning.py`)
+and drives the uniform `Trainer` protocol. ``--print-spec`` emits the
+fully-resolved spec as canonical JSON — commit that file and the run is
+reproducible from it alone.
+
+``--mode`` selects the execution strategy
+(baseline/synchronized/concurrent/population; see
+docs/experiment_api.md). The default ``population`` vmaps the
+concurrent cycle over ``--seeds`` replicas seeded [--seed, --seed + P)
+and shards them over visible devices (core/population.py); a --seeds P
+fleet is bitwise-equal per replica to P independent --seeds 1 runs
+(tests/test_population.py). --ckpt-dir checkpoints the full carry every
+--ckpt-every cycles and stores the resolved spec beside it; --resume
+restarts from the latest checkpoint bitwise-identically to the
+uninterrupted run, and fails with a field-level spec diff when the
+requested spec no longer matches the stored one. --metrics-jsonl
+appends one JSON line per (cycle, replica).
 
 --frame-size 84 uses the exact Nature-CNN input geometry (84x84x4).
 The optimizer defaults to AdamW for fast convergence on the JAX envs;
---paper-optimizer selects Mnih's centered RMSProp (2.5e-4), faithful but
-tuned for 200M-frame Atari budgets.
+--optimizer rmsprop (alias --paper-optimizer) selects Mnih's centered
+RMSProp (2.5e-4), faithful but tuned for 200M-frame Atari budgets —
+--optimizer overrides the spec's choice in either direction.
 
 --variant {dqn,double,dueling,per,c51,noisy,rainbow_lite,rainbow}
 selects the off-policy variant preset (configs/dqn_nature.VARIANTS;
@@ -32,6 +49,7 @@ seconds for the CI variant smoke job.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -39,129 +57,169 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.config import DQNConfig, ExecConfig
-from repro.configs.dqn_nature import (VARIANTS, NatureCNNConfig,
-                                      cnn_config_for, get_variant)
-from repro.envs import get_env
-from repro.models.nature_cnn import q_forward, q_init, q_logits
-from repro.optim import adamw, centered_rmsprop
+from repro.api import (ExperimentSpec, SpecCompatError, build_trainer,
+                       check_resume_compat, load_run_spec, save_run_spec)
+from repro.api.spec import MODES
+from repro.configs.dqn_nature import VARIANTS, get_variant
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
-from repro.core.population import (eval_keys, make_population_cycle,
-                                   make_replica_init, population_evaluate,
-                                   population_init, replica_mesh, seed_array)
 
 
-def main(argv=None):
+def parse_args(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--env", default="catch")
-    ap.add_argument("--cycles", type=int, default=60)
-    ap.add_argument("--cycle-steps", type=int, default=256)
-    ap.add_argument("--envs", type=int, default=8)
-    ap.add_argument("--frame-size", type=int, default=10, choices=[10, 84])
-    ap.add_argument("--paper-optimizer", action="store_true")
-    ap.add_argument("--eval-every", type=int, default=20)
-    ap.add_argument("--prepopulate", type=int, default=2048)
-    ap.add_argument("--seed", type=int, default=0,
+    # Spec-level I/O. Flags below override spec fields; their argparse
+    # defaults are all None so "not given" is distinguishable from an
+    # explicit value (the spec file — or the ExperimentSpec defaults —
+    # win for omitted flags).
+    ap.add_argument("--spec", default=None, metavar="FILE",
+                    help="ExperimentSpec JSON to start from "
+                         "(repro.api; flags override its fields)")
+    ap.add_argument("--print-spec", action="store_true",
+                    help="print the fully-resolved spec as canonical "
+                         "JSON and exit (commit it, re-run with --spec)")
+    ap.add_argument("--mode", default=None, choices=list(MODES),
+                    help="execution strategy (docs/experiment_api.md)")
+    ap.add_argument("--env", default=None)
+    ap.add_argument("--cycles", type=int, default=None)
+    ap.add_argument("--cycle-steps", type=int, default=None)
+    ap.add_argument("--envs", type=int, default=None)
+    ap.add_argument("--frame-size", type=int, default=None, choices=[10, 84])
+    ap.add_argument("--optimizer", default=None,
+                    choices=["adamw", "rmsprop"],
+                    help="override the spec's optimizer either way")
+    ap.add_argument("--paper-optimizer", action="store_true",
+                    help="Mnih's centered RMSProp instead of AdamW "
+                         "(alias for --optimizer rmsprop)")
+    ap.add_argument("--eval-every", type=int, default=None)
+    ap.add_argument("--prepopulate", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=None,
                     help="base replica seed (replica r runs seed+r)")
-    ap.add_argument("--seeds", type=int, default=1,
+    ap.add_argument("--seeds", type=int, default=None,
                     help="population size P: the concurrent cycle is "
                          "vmapped over P replicas and sharded over "
                          "visible devices (core/population.py)")
     ap.add_argument("--ckpt-dir", default=None,
-                    help="checkpoint the full population carry here")
-    ap.add_argument("--ckpt-every", type=int, default=20,
+                    help="checkpoint the full carry here (the resolved "
+                         "spec is stored beside the checkpoints)")
+    ap.add_argument("--ckpt-every", type=int, default=None,
                     help="cycles between checkpoints (with --ckpt-dir)")
     ap.add_argument("--resume", action="store_true",
                     help="resume from the latest checkpoint in --ckpt-dir "
                          "(bitwise-identical to the uninterrupted run)")
     ap.add_argument("--metrics-jsonl", default=None,
                     help="append per-(cycle, replica) metrics as JSON lines")
-    ap.add_argument("--variant", default="dqn", choices=sorted(VARIANTS),
+    ap.add_argument("--variant", default=None, choices=sorted(VARIANTS),
                     help="off-policy variant preset (configs/dqn_nature)")
-    ap.add_argument("--kernel-backend", default="auto",
+    ap.add_argument("--kernel-backend", default=None,
                     choices=["auto", "pallas", "interpret", "ref",
                              "mosaic", "triton"],
                     help="segment-tree kernel request for PER variants "
                          "(REPRO_KERNEL_BACKEND env var overrides)")
     ap.add_argument("--dryrun", action="store_true",
                     help="one tiny cycle per stage (CI variant smoke)")
-    ap.add_argument("--compute-dtype", default="float32",
+    ap.add_argument("--compute-dtype", default=None,
                     choices=["float32", "bfloat16"],
                     help="Q-network compute dtype (paper default f32; "
                          "bf16 halves actor-inference bandwidth)")
-    args = ap.parse_args(argv)
+    return ap.parse_args(argv)
+
+
+def resolve_spec(args) -> ExperimentSpec:
+    """(spec file or defaults) + flag overrides -> one ExperimentSpec."""
+    if args.spec:
+        with open(args.spec) as f:
+            spec = ExperimentSpec.from_json(f.read())
+    else:
+        spec = ExperimentSpec()
+
+    def sub(section, **kw):
+        changed = {k: v for k, v in kw.items() if v is not None}
+        if not changed:
+            return section
+        return dataclasses.replace(section, **changed)
+
+    top = {k: v for k, v in {
+        "mode": args.mode, "env": args.env, "envs": args.envs,
+        "frame_size": args.frame_size, "seed": args.seed,
+        "seeds": args.seeds,
+        "variant": get_variant(args.variant) if args.variant else None,
+    }.items() if v is not None}
+    spec = dataclasses.replace(
+        spec, **top,
+        schedule=sub(spec.schedule, cycles=args.cycles,
+                     cycle_steps=args.cycle_steps,
+                     prepopulate=args.prepopulate,
+                     eval_every=args.eval_every),
+        algo=sub(spec.algo,
+                 optimizer=args.optimizer or
+                 ("rmsprop" if args.paper_optimizer else None)),
+        checkpoint=sub(spec.checkpoint, dir=args.ckpt_dir,
+                       every=args.ckpt_every),
+        metrics=sub(spec.metrics, jsonl=args.metrics_jsonl),
+        exec=sub(spec.exec, compute_dtype=args.compute_dtype,
+                 kernel_backend=args.kernel_backend))
 
     if args.dryrun:
-        args.cycles, args.cycle_steps = 2, 32
-        args.envs, args.prepopulate, args.eval_every = 4, 64, 2
+        spec = dataclasses.replace(
+            spec, envs=4,
+            schedule=dataclasses.replace(spec.schedule, cycles=2,
+                                         cycle_steps=32, prepopulate=64,
+                                         eval_every=2))
+    return spec
 
-    variant = get_variant(args.variant)
-    spec = get_env(args.env)
-    small = args.frame_size == 10
-    ncfg = cnn_config_for(variant, NatureCNNConfig(
-        frame_size=args.frame_size, frame_stack=2 if small else 4,
-        convs=((16, 3, 1), (16, 3, 1)) if small else
-              ((32, 8, 4), (64, 4, 2), (64, 3, 1)),
-        hidden=64 if small else 512, n_actions=spec.n_actions))
-    dcfg = DQNConfig(
-        minibatch_size=32, replay_capacity=16384,
-        target_update_period=args.cycle_steps, train_period=2,
-        prepopulate=args.prepopulate, n_envs=args.envs,
-        frame_stack=ncfg.frame_stack,
-        eps_anneal_steps=max(args.cycles * args.cycle_steps // 2, 1),
-        discount=0.9, variant=variant)
 
-    ec = ExecConfig(compute_dtype=args.compute_dtype,
-                    kernel_backend=args.kernel_backend)
-    # trailing noise key (NoisyNet; None = μ-only, e.g. greedy eval)
-    qf = lambda p, o, k=None: q_forward(p, o, ncfg, ec, noise_key=k)
-    qlog = ((lambda p, o, k=None: q_logits(p, o, ncfg, ec, noise_key=k))
-            if variant.distributional else None)
-    opt = (centered_rmsprop(2.5e-4) if args.paper_optimizer
-           else adamw(1e-3, weight_decay=0.0))
+def main(argv=None):
+    args = parse_args(argv)
+    spec = resolve_spec(args)
+    if args.print_spec:
+        print(spec.to_json(), end="")
+        return 0
+    spec.validate()
 
-    fs = args.frame_size
-    seeds = seed_array(args.seed, args.seeds)
-    init_one = make_replica_init(
-        spec, lambda k: q_init(ncfg, spec.n_actions, k), qf, opt, dcfg, fs)
+    trainer = build_trainer(spec)
+    sched = spec.schedule
+    ckpt_dir = spec.checkpoint.dir
+    P = trainer.replicas
+    seeds_host = [spec.seed + r for r in range(P)]
 
     start_cycle = 0
-    last = (latest_step(args.ckpt_dir)
-            if args.resume and args.ckpt_dir else None)
+    last = (latest_step(ckpt_dir) if args.resume and ckpt_dir else None)
+    if last is not None:
+        try:
+            stored = load_run_spec(ckpt_dir)
+            if stored is not None:
+                check_resume_compat(stored, spec)
+        except SpecCompatError as e:
+            print(f"cannot resume {ckpt_dir}: {e}", flush=True)
+            return 2
+    if ckpt_dir:
+        # before any expensive init: refuses to overwrite a different
+        # run's spec while its checkpoints still sit beside it
+        try:
+            save_run_spec(ckpt_dir, spec)
+        except SpecCompatError as e:
+            print(f"refusing to reuse {ckpt_dir}: {e}", flush=True)
+            return 2
     if last is not None:
         # restore needs only the carry's tree *structure*, so build the
         # template abstractly — no param init, no prepopulate scan
-        template = jax.eval_shape(lambda s: population_init(init_one, s),
-                                  seeds)
-        carry = restore_checkpoint(args.ckpt_dir, last, template)
+        carry = restore_checkpoint(ckpt_dir, last, trainer.init_template())
         start_cycle = last
-        print(f"resumed {args.ckpt_dir} at cycle {last}", flush=True)
+        print(f"resumed {ckpt_dir} at cycle {last}", flush=True)
     else:
-        carry = jax.jit(lambda s: population_init(init_one, s))(seeds)
-
-    mesh = replica_mesh(args.seeds)
-    cycle = jax.jit(make_population_cycle(
-        spec, qf, opt, dcfg, frame_size=fs,
-        kernel_backend=args.kernel_backend, q_logits=qlog, mesh=mesh))
-    # eval horizon follows the env's own episode bound, so long envs
-    # (pong/breakout run to 500 steps) are never truncation-biased
-    ev = jax.jit(lambda p, k: population_evaluate(
-        spec, qf, p, k, dcfg, n_episodes=64, frame_size=fs,
-        max_steps=spec.max_steps + 2))
+        carry = trainer.init_carry()
 
     metrics_f = None
-    seeds_host = [int(s) for s in jax.device_get(seeds)]
-    if args.metrics_jsonl:
-        os.makedirs(os.path.dirname(args.metrics_jsonl) or ".",
+    if spec.metrics.jsonl:
+        os.makedirs(os.path.dirname(spec.metrics.jsonl) or ".",
                     exist_ok=True)
-        if os.path.exists(args.metrics_jsonl):
+        if os.path.exists(spec.metrics.jsonl):
             # the loop emits every cycle > start_cycle, so drop those
             # rows (all of them on a fresh run) — the file must never
             # hold two rows per (cycle, replica). A partially-written
             # last line (the state an interrupted run leaves) is dropped
             # the same way.
             kept = []
-            with open(args.metrics_jsonl) as f:
+            with open(spec.metrics.jsonl) as f:
                 for ln in f:
                     try:
                         row = json.loads(ln)
@@ -169,19 +227,20 @@ def main(argv=None):
                         continue
                     if row.get("cycle", 0) <= start_cycle:
                         kept.append(ln)
-            with open(args.metrics_jsonl, "w") as f:
+            with open(spec.metrics.jsonl, "w") as f:
                 f.writelines(kept)
-        metrics_f = open(args.metrics_jsonl, "a", buffering=1)
+        metrics_f = open(spec.metrics.jsonl, "a", buffering=1)
 
     def emit(i, m, evals=None):
         if metrics_f is None:
             return
         # one bulk device->host transfer per cycle, not 6 per replica
         mh = jax.device_get(m)
-        steps = jax.device_get(carry.step)
+        steps = jax.device_get(trainer.steps(carry))
         evh = None if evals is None else jax.device_get(evals)
-        for r in range(args.seeds):
-            row = {"cycle": i + 1, "env": args.env, "variant": args.variant,
+        for r in range(P):
+            row = {"cycle": i + 1, "env": spec.env, "mode": spec.mode,
+                   "variant": spec.variant.name,
                    "seed": seeds_host[r], "step": int(steps[r]),
                    "loss": float(mh["loss"][r]),
                    "reward": float(mh["reward"][r]),
@@ -191,30 +250,31 @@ def main(argv=None):
             metrics_f.write(json.dumps(row) + "\n")
 
     t0 = time.time()
-    for i in range(start_cycle, args.cycles):
-        carry, m = cycle(carry)
+    for i in range(start_cycle, sched.cycles):
+        carry, m = trainer.cycle(carry)
         evals = None
-        if (i + 1) % args.eval_every == 0 or i == args.cycles - 1:
-            evals = ev(carry.params, eval_keys(seeds, i))
-            sps = (int(jnp.sum(carry.step))
-                   - args.seeds * start_cycle * args.cycle_steps) \
+        if (i + 1) % sched.eval_every == 0 or i == sched.cycles - 1:
+            evals = trainer.eval(carry, trainer.eval_key(i))
+            steps_now = trainer.steps(carry)
+            sps = (int(jnp.sum(steps_now))
+                   - P * start_cycle * sched.cycle_steps) \
                 / max(time.time() - t0, 1e-9)
             r_mean = float(jnp.mean(evals))
             r_span = (float(jnp.min(evals)), float(jnp.max(evals)))
-            print(f"[{args.variant}] cycle {i+1:4d} "
-                  f"steps {int(carry.step[0]):7d} x{args.seeds} "
+            print(f"[{spec.variant.name}] cycle {i+1:4d} "
+                  f"steps {int(steps_now[0]):7d} x{P} "
                   f"eval {r_mean:+.2f} [{r_span[0]:+.2f},{r_span[1]:+.2f}] "
                   f"loss {float(jnp.mean(m['loss'])):.4f} "
                   f"eps {float(jnp.mean(m['eps'])):.2f} | "
                   f"{sps:.0f} env-steps/s", flush=True)
         emit(i, m, evals)
-        if args.ckpt_dir and ((i + 1) % args.ckpt_every == 0
-                              or i == args.cycles - 1):
-            save_checkpoint(args.ckpt_dir, i + 1, carry)
+        if ckpt_dir and ((i + 1) % spec.checkpoint.every == 0
+                         or i == sched.cycles - 1):
+            save_checkpoint(ckpt_dir, i + 1, carry)
     if metrics_f is not None:
         metrics_f.close()
     if args.dryrun:
-        print(f"DRYRUN OK variant={args.variant}", flush=True)
+        print(f"DRYRUN OK variant={spec.variant.name}", flush=True)
     return 0
 
 

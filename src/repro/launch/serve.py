@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, reduced_config
 from repro.models import transformer as T
-from repro.models.layers import ExecConfig
+from repro.config import ExecConfig
 from repro.launch.steps import make_serve_step
 
 

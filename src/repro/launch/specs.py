@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import INPUT_SHAPES, ModelConfig, ShapeConfig
-from repro.models.layers import ExecConfig
+from repro.config import ExecConfig
 from repro.launch.steps import abstract_cache
 
 

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig, TrainConfig
 from repro.models import transformer as T
-from repro.models.layers import ExecConfig, softmax_cross_entropy
+from repro.config import ExecConfig
+from repro.models.layers import softmax_cross_entropy
 from repro.optim import adamw, warmup_cosine
 from repro.optim.base import apply_updates
 

@@ -22,7 +22,7 @@ from repro.config import TrainConfig
 from repro.configs import get_config, reduced_config
 from repro.data import SyntheticLM
 from repro.models import transformer as T
-from repro.models.layers import ExecConfig
+from repro.config import ExecConfig
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import make_train_step
 from repro.checkpoint import save_checkpoint

@@ -1,1 +1,1 @@
-from repro.models.layers import ExecConfig, DEFAULT_EXEC  # noqa: F401
+from repro.config import DEFAULT_EXEC, ExecConfig  # noqa: F401

@@ -15,7 +15,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import ExecConfig, DEFAULT_EXEC
+from repro.config import DEFAULT_EXEC, ExecConfig
 
 NEG_INF = -1e30
 

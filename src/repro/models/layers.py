@@ -1,19 +1,37 @@
 """Shared pure-JAX layer math: norms, RoPE, MLPs, losses.
 
 ``ExecConfig`` moved to ``repro.config`` (it configures the whole stack,
-not just layers); the re-export below keeps the historical import path
-``from repro.models.layers import ExecConfig`` working.
+not just layers). The historical import path
+``from repro.models.layers import ExecConfig`` still works but is
+**deprecated** — the module-level ``__getattr__`` below forwards it
+with a ``DeprecationWarning``; new code imports from ``repro.config``.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import DEFAULT_EXEC, ExecConfig  # noqa: F401  (re-export)
+if TYPE_CHECKING:  # the runtime re-export is deprecated (see below)
+    from repro.config import ExecConfig
+
+_MOVED_TO_CONFIG = ("ExecConfig", "DEFAULT_EXEC")
+
+
+def __getattr__(name: str):
+    """Deprecated re-export shim for names that moved to repro.config."""
+    if name in _MOVED_TO_CONFIG:
+        import warnings
+        warnings.warn(
+            f"importing {name} from repro.models.layers is deprecated; "
+            f"import it from repro.config instead",
+            DeprecationWarning, stacklevel=2)
+        from repro import config
+        return getattr(config, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def round_up(x: int, m: int) -> int:

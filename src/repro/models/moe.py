@@ -32,7 +32,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.config import ModelConfig, MoEConfig
-from repro.models.layers import ExecConfig
+from repro.config import ExecConfig
 from repro.models import params as PM
 
 

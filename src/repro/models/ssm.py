@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.models.layers import ExecConfig, rms_norm
+from repro.config import ExecConfig
+from repro.models.layers import rms_norm
 from repro.models import params as P
 
 

@@ -29,8 +29,9 @@ from repro.models import attention as A
 from repro.models import moe as M
 from repro.models import ssm as SSM
 from repro.models import xlstm as XL
-from repro.models.layers import (DEFAULT_EXEC, ExecConfig, apply_rope, gelu_mlp,
-                                 rms_norm, round_up, swiglu)
+from repro.config import DEFAULT_EXEC, ExecConfig
+from repro.models.layers import (apply_rope, gelu_mlp, rms_norm, round_up,
+                                 swiglu)
 
 Tree = Any
 

@@ -23,7 +23,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import ModelConfig
 from repro.models import params as PM
-from repro.models.layers import ExecConfig, round_up
+from repro.config import ExecConfig
+from repro.models.layers import round_up
 from repro.models.ssm import ssm_dims
 from repro.models.xlstm import mlstm_dims
 

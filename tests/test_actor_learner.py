@@ -8,7 +8,7 @@ import pytest
 from repro.configs import reduced_config
 from repro.core.actor_learner import (ALConfig, make_actor_learner,
                                       synthetic_reward)
-from repro.models.layers import ExecConfig
+from repro.config import ExecConfig
 
 
 def test_synthetic_reward_bounds_and_signal():

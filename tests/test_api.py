@@ -1,0 +1,368 @@
+"""Unified Experiment API guarantees (repro.api):
+
+1. `ExperimentSpec` JSON round-trips losslessly for every variant
+   preset, and `to_json` is canonical (re-serialization byte-identical);
+2. every execution mode constructs through `build_trainer` and
+   satisfies the `Trainer` protocol, with the uniform leading-replica
+   shape contract on metrics/eval/steps;
+3. a spec-built run is **bitwise-equal** to the ad-hoc wiring it
+   replaced (the pre-PR-5 rl_train construction), and the `concurrent`
+   mode is bitwise-equal per replica to a 1-seed `population`;
+4. sequential modes reject staging-dependent variants at build time
+   with an actionable message;
+5. the committed golden specs under examples/specs/ stay canonical and
+   buildable (the CI docs job re-checks this without pytest).
+"""
+
+import contextlib
+import dataclasses
+import glob
+import io
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (AlgoSpec, ExperimentSpec, MODES, ScheduleSpec,
+                       Trainer, TRAINERS, build_trainer)
+from repro.config import DQNConfig, ExecConfig
+from repro.configs.dqn_nature import (VARIANTS, NatureCNNConfig,
+                                      cnn_config_for, get_variant)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# tiny-but-real sizing shared by the construction/run tests: the "tiny"
+# net compiles in seconds and 16-step cycles keep every mode's scan short
+TINY = dict(
+    envs=4, frame_size=10, net="tiny",
+    schedule=ScheduleSpec(cycles=2, cycle_steps=16, prepopulate=32,
+                          eval_every=1, eval_episodes=4),
+    algo=AlgoSpec(minibatch_size=8, replay_capacity=128, train_period=4,
+                  eps_anneal_steps=1000))
+
+
+def _tiny_spec(mode="concurrent", variant="dqn", **over):
+    return ExperimentSpec(mode=mode, variant=get_variant(variant),
+                          **{**TINY, **over})
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# 1. serialization
+# ---------------------------------------------------------------------------
+
+def test_registry_matches_modes():
+    """TRAINERS and spec.MODES cannot drift."""
+    assert sorted(TRAINERS) == sorted(MODES)
+
+
+@pytest.mark.parametrize("preset", sorted(VARIANTS))
+def test_roundtrip_lossless_every_preset(preset):
+    spec = ExperimentSpec.from_preset(preset, seeds=3, env="pong",
+                                      frame_size=84)
+    text = spec.to_json()
+    back = ExperimentSpec.from_json(text)
+    assert back == spec
+    assert back.to_json() == text          # canonical: byte-identical
+
+
+def test_to_json_canonical_form():
+    text = ExperimentSpec().to_json()
+    assert text.endswith("\n")
+    data = json.loads(text)
+    # every top-level field serialized, sorted
+    want = sorted(f.name for f in dataclasses.fields(ExperimentSpec))
+    assert sorted(data) == want
+    assert list(data) == sorted(data)      # json.dumps(sort_keys=True)
+
+
+def test_from_json_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="cycle_stepz"):
+        ExperimentSpec.from_json(
+            '{"schedule": {"cycle_stepz": 7}}')
+
+
+def test_from_json_coerces_int_for_float_fields():
+    """`"discount": 1` must not break canonical re-serialization."""
+    spec = ExperimentSpec.from_json('{"algo": {"discount": 1}}')
+    assert isinstance(spec.algo.discount, float)
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    assert '"discount": 1.0' in spec.to_json()
+
+
+def test_from_json_missing_fields_default():
+    """Older (sparser) spec files keep loading as the schema grows."""
+    spec = ExperimentSpec.from_json('{"env": "pong"}')
+    assert spec == ExperimentSpec(env="pong")
+
+
+def test_validate_rejects_bad_specs():
+    with pytest.raises(ValueError, match="mode"):
+        ExperimentSpec(mode="threads").validate()
+    with pytest.raises(ValueError, match="env"):
+        ExperimentSpec(env="ale_pong").validate()
+    with pytest.raises(ValueError, match="net"):
+        ExperimentSpec(net="resnet").validate()
+    with pytest.raises(ValueError, match="optimizer"):
+        ExperimentSpec(algo=AlgoSpec(optimizer="sgd")).validate()
+    with pytest.raises(ValueError, match="frame_size"):
+        ExperimentSpec(frame_size=64).validate()
+
+
+# ---------------------------------------------------------------------------
+# 2. the Trainer protocol over every mode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", list(MODES))
+def test_mode_constructs_and_satisfies_protocol(mode):
+    spec = _tiny_spec(mode=mode, seeds=2 if mode == "population" else 1)
+    trainer = build_trainer(spec)
+    assert isinstance(trainer, Trainer)
+    P = trainer.replicas
+    assert P == (2 if mode == "population" else 1)
+
+    carry = trainer.init_carry()
+    carry, metrics = trainer.cycle(carry)
+    for k in ("loss", "reward", "episodes", "eps"):
+        assert metrics[k].shape[:1] == (P,), (mode, k, metrics[k].shape)
+    steps = trainer.steps(carry)
+    assert steps.shape == (P,)
+    assert int(steps[0]) == spec.schedule.cycle_steps
+    returns = trainer.eval(carry, trainer.eval_key(0))
+    assert returns.shape == (P,)
+
+    # the template mirrors the carry structure without running init
+    template = trainer.init_template()
+    _assert_same_structure = jax.tree_util.tree_structure
+    assert _assert_same_structure(template) == _assert_same_structure(carry)
+
+    # and a trainer rebuilt from the serialized spec is the same run,
+    # bitwise: carry after one cycle, metrics, and eval all match
+    trainer2 = build_trainer(ExperimentSpec.from_json(spec.to_json()))
+    carry2 = trainer2.init_carry()
+    carry2, metrics2 = trainer2.cycle(carry2)
+    _assert_trees_equal(carry2, carry)
+    _assert_trees_equal(metrics2, metrics)
+    np.testing.assert_array_equal(
+        np.asarray(returns),
+        np.asarray(trainer2.eval(carry2, trainer2.eval_key(0))))
+
+
+def test_build_trainer_unknown_mode_lists_registered():
+    spec = dataclasses.replace(_tiny_spec(), mode="population")
+    object.__setattr__(spec, "mode", "threads")   # bypass frozen for the msg
+    with pytest.raises((KeyError, ValueError)) as ei:
+        build_trainer(spec)
+    assert "threads" in str(ei.value)
+
+
+@pytest.mark.parametrize("mode", ["baseline", "synchronized"])
+@pytest.mark.parametrize("variant", ["per", "c51", "noisy", "rainbow"])
+def test_sequential_modes_reject_staging_variants(mode, variant):
+    with pytest.raises(ValueError) as ei:
+        build_trainer(_tiny_spec(mode=mode, variant=variant))
+    msg = str(ei.value)
+    assert mode in msg and variant in msg and "concurrent" in msg
+
+
+def test_sequential_modes_accept_loss_level_variants():
+    for variant in ("double", "dueling"):
+        trainer = build_trainer(_tiny_spec(mode="baseline",
+                                           variant=variant))
+        carry = trainer.init_carry()
+        carry, m = trainer.cycle(carry)
+        assert np.isfinite(float(m["loss"][0]))
+
+
+def test_synchronized_requires_w2():
+    with pytest.raises(ValueError, match="W >= 2"):
+        build_trainer(_tiny_spec(mode="synchronized", envs=1))
+
+
+@pytest.mark.parametrize("mode", ["baseline", "synchronized"])
+def test_sequential_modes_reject_subround_train_period(mode):
+    """F < W (or F % W != 0) cannot be expressed in the batched
+    formulation; accepting it would silently run W/F times more env
+    steps per cycle than the spec claims."""
+    spec = _tiny_spec(
+        mode=mode,
+        algo=dataclasses.replace(TINY["algo"], train_period=2))  # W=4
+    with pytest.raises(ValueError, match="multiple of envs"):
+        build_trainer(spec)
+
+
+# ---------------------------------------------------------------------------
+# 3. bitwise equivalence with the wiring the API replaced
+# ---------------------------------------------------------------------------
+
+def test_population_spec_bitwise_equals_legacy_wiring():
+    """`build_trainer(spec)` reproduces the pre-PR-5 rl_train
+    construction bit for bit: same CNN geometry resolution, same
+    DQNConfig derivation, same init/cycle/eval wiring."""
+    from repro.core.population import (eval_keys, make_population_cycle,
+                                       make_replica_init, population_evaluate,
+                                       population_init, replica_mesh,
+                                       seed_array)
+    from repro.models.nature_cnn import q_forward, q_init
+    from repro.optim import adamw
+
+    cycles, cycle_steps, envs, prepop, seeds_n = 2, 16, 4, 32, 2
+    variant = get_variant("per")
+
+    # --- the old flag path, copied from PR-4 rl_train ------------------
+    spec_env = __import__("repro.envs", fromlist=["get_env"]).get_env("catch")
+    ncfg = cnn_config_for(variant, NatureCNNConfig(
+        frame_size=10, frame_stack=2, convs=((16, 3, 1), (16, 3, 1)),
+        hidden=64, n_actions=spec_env.n_actions))
+    dcfg = DQNConfig(
+        minibatch_size=32, replay_capacity=16384,
+        target_update_period=cycle_steps, train_period=2,
+        prepopulate=prepop, n_envs=envs, frame_stack=ncfg.frame_stack,
+        eps_anneal_steps=max(cycles * cycle_steps // 2, 1),
+        discount=0.9, variant=variant)
+    ec = ExecConfig(compute_dtype="float32", kernel_backend="auto")
+    qf = lambda p, o, k=None: q_forward(p, o, ncfg, ec, noise_key=k)
+    opt = adamw(1e-3, weight_decay=0.0)
+    seeds = seed_array(0, seeds_n)
+    init_one = make_replica_init(
+        spec_env, lambda k: q_init(ncfg, spec_env.n_actions, k), qf, opt,
+        dcfg, 10)
+    carry_old = jax.jit(lambda s: population_init(init_one, s))(seeds)
+    cycle_old = jax.jit(make_population_cycle(
+        spec_env, qf, opt, dcfg, frame_size=10, kernel_backend="auto",
+        mesh=replica_mesh(seeds_n)))
+    ev_old = jax.jit(lambda p, k: population_evaluate(
+        spec_env, qf, p, k, dcfg, n_episodes=8, frame_size=10,
+        max_steps=spec_env.max_steps + 2))
+
+    # --- the declarative path ------------------------------------------
+    spec = ExperimentSpec(
+        env="catch", mode="population", variant=variant, envs=envs,
+        frame_size=10, seed=0, seeds=seeds_n,
+        schedule=ScheduleSpec(cycles=cycles, cycle_steps=cycle_steps,
+                              prepopulate=prepop, eval_every=1,
+                              eval_episodes=8))
+    trainer = build_trainer(spec)
+    carry_new = trainer.init_carry()
+    _assert_trees_equal(carry_new, carry_old)
+
+    for i in range(cycles):
+        carry_old, m_old = cycle_old(carry_old)
+        carry_new, m_new = trainer.cycle(carry_new)
+        _assert_trees_equal(carry_new, carry_old)
+        _assert_trees_equal(m_new, m_old)
+    np.testing.assert_array_equal(
+        np.asarray(trainer.eval(carry_new, trainer.eval_key(1))),
+        np.asarray(ev_old(carry_old.params, eval_keys(seeds, 1))))
+
+
+def test_concurrent_bitwise_equals_single_seed_population():
+    """The population layer is a pure batching transform, so mode
+    `concurrent` (no vmap) equals replica 0 of `population` with
+    seeds=1 — metrics and carry, bitwise."""
+    conc = build_trainer(_tiny_spec(mode="concurrent", variant="double"))
+    pop = build_trainer(_tiny_spec(mode="population", variant="double",
+                                   seeds=1))
+    c1, c2 = conc.init_carry(), pop.init_carry()
+    for _ in range(2):
+        c1, m1 = conc.cycle(c1)
+        c2, m2 = pop.cycle(c2)
+        _assert_trees_equal(m1, m2)
+    for a, b in zip(jax.tree_util.tree_leaves(c1),
+                    jax.tree_util.tree_leaves(c2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b)[0])
+    np.testing.assert_array_equal(
+        np.asarray(conc.eval(c1, conc.eval_key(3))),
+        np.asarray(pop.eval(c2, pop.eval_key(3))))
+
+
+# ---------------------------------------------------------------------------
+# 4. launcher shims
+# ---------------------------------------------------------------------------
+
+def test_print_spec_round_trips_through_launcher():
+    from repro.launch import rl_train
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        assert rl_train.main(["--print-spec", "--variant", "rainbow",
+                              "--seeds", "4", "--env", "pong",
+                              "--paper-optimizer"]) == 0
+    spec = ExperimentSpec.from_json(buf.getvalue())
+    assert spec.variant == get_variant("rainbow")
+    assert (spec.seeds, spec.env, spec.algo.optimizer) == (4, "pong",
+                                                           "rmsprop")
+    assert spec.to_json() == buf.getvalue()   # canonical out of the box
+
+
+def test_optimizer_flag_overrides_spec_both_ways(tmp_path):
+    """An rmsprop spec can be flag-overridden back to adamw (the
+    store_true --paper-optimizer alone couldn't express that)."""
+    from repro.launch import rl_train
+    spec_path = tmp_path / "paper.json"
+    spec_path.write_text(ExperimentSpec(
+        algo=AlgoSpec(optimizer="rmsprop")).to_json())
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        assert rl_train.main(["--spec", str(spec_path), "--optimizer",
+                              "adamw", "--print-spec"]) == 0
+    assert ExperimentSpec.from_json(buf.getvalue()).algo.optimizer == "adamw"
+
+
+def test_dryrun_spec_builds_for_every_preset():
+    """The dryrun grid's specs construct through build_trainer (the
+    compile itself is the tier-2 dryrun job's business)."""
+    from repro.launch.dryrun import dqn_variant_spec
+    for preset in sorted(VARIANTS):
+        trainer = build_trainer(dqn_variant_spec(preset, "ref"))
+        assert trainer.spec.variant.name == preset
+
+
+@pytest.mark.slow
+def test_rl_train_spec_file_bitwise_equals_flag_run(tmp_path, monkeypatch):
+    """Acceptance: `rl_train --spec f.json` emits bitwise-identical
+    metrics to the flag invocation that produced f.json."""
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "ref")
+    from repro.launch import rl_train
+
+    flags = ["--variant", "rainbow", "--seeds", "2", "--dryrun"]
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        assert rl_train.main(flags + ["--print-spec"]) == 0
+    spec_path = tmp_path / "run.json"
+    spec_path.write_text(buf.getvalue())
+
+    m_flags = tmp_path / "flags.jsonl"
+    m_spec = tmp_path / "spec.jsonl"
+    assert rl_train.main(flags + ["--metrics-jsonl", str(m_flags)]) == 0
+    assert rl_train.main(["--spec", str(spec_path),
+                          "--metrics-jsonl", str(m_spec)]) == 0
+    assert m_spec.read_text() == m_flags.read_text()
+    rows = [json.loads(ln) for ln in m_flags.read_text().splitlines()]
+    assert {r["cycle"] for r in rows} == {1, 2}
+    assert all(r["variant"] == "rainbow" for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# 5. committed golden specs
+# ---------------------------------------------------------------------------
+
+def test_golden_specs_canonical_and_buildable():
+    paths = sorted(glob.glob(os.path.join(REPO, "examples", "specs",
+                                          "*.json")))
+    assert paths, "examples/specs/ must hold committed golden specs"
+    for path in paths:
+        with open(path) as f:
+            text = f.read()
+        spec = ExperimentSpec.from_json(text)
+        assert spec.to_json() == text, f"{path} is not canonical"
+        trainer = build_trainer(spec)
+        want = spec.seeds if spec.mode == "population" else 1
+        assert trainer.replicas == want

@@ -1,6 +1,9 @@
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import compat
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
@@ -45,6 +48,85 @@ def test_namedtuple_carry_roundtrip(tmp_path):
     assert len(la) == len(lb)
     for a, b in zip(la, lb):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_template_mismatch_names_paths(tmp_path):
+    """A checkpoint written under one carry structure restored against
+    another must fail by NAMING the mismatched paths — pre-PR-5 this
+    surfaced as an opaque KeyError inside the unflatten walk."""
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, {"params": {"w": jnp.ones((2,))}})
+    template = {"params": {"w": jnp.ones((2,)),
+                           "w_sigma": jnp.ones((2,))}}  # e.g. noisy head
+    with pytest.raises(ValueError) as ei:
+        restore_checkpoint(d, 1, template)
+    assert "params/w_sigma" in str(ei.value)
+    assert "different spec" in str(ei.value)
+
+
+def test_resume_spec_compat_guard(tmp_path):
+    """--resume with a spec that mismatches the stored one fails with a
+    field-level diff (repro.api guard), and legitimate run extensions
+    (more cycles, different eval cadence, moved output paths) stay
+    compatible."""
+    from repro.api import (ExperimentSpec, SpecCompatError,
+                           check_resume_compat, load_run_spec,
+                           save_run_spec, spec_compat_diff)
+
+    import repro.api as api
+
+    d = str(tmp_path / "run")
+    # eps_anneal_steps pinned: a run must pin its anneal horizon to be
+    # extendable (the derived 0-sentinel depends on cycles — see below)
+    spec = ExperimentSpec.from_preset(
+        "rainbow", seeds=2,
+        algo=api.AlgoSpec(eps_anneal_steps=7680))
+    save_run_spec(d, spec)
+    stored = load_run_spec(d)
+    assert stored == spec
+
+    # run extensions and output relocations are NOT incompatibilities
+    extended = dataclasses.replace(
+        spec,
+        schedule=dataclasses.replace(spec.schedule, cycles=999,
+                                     eval_every=5),
+        checkpoint=dataclasses.replace(spec.checkpoint, dir="elsewhere"))
+    assert spec_compat_diff(stored, extended) == []
+    check_resume_compat(stored, extended)   # no raise
+
+    # ... but when the anneal horizon is DERIVED (eps_anneal_steps=0),
+    # extending cycles silently changes the ε schedule, so the guard
+    # materializes the derived value and flags it
+    derived = dataclasses.replace(spec, algo=api.AlgoSpec())
+    derived_ext = dataclasses.replace(
+        derived,
+        schedule=dataclasses.replace(derived.schedule, cycles=999))
+    diff = spec_compat_diff(derived, derived_ext)
+    assert len(diff) == 1 and diff[0].startswith("algo.eps_anneal_steps")
+
+    # structural changes fail with the differing fields named
+    changed = dataclasses.replace(
+        spec, frame_size=84,
+        variant=dataclasses.replace(spec.variant, num_atoms=21))
+    with pytest.raises(SpecCompatError) as ei:
+        check_resume_compat(stored, changed)
+    msg = str(ei.value)
+    assert "frame_size: checkpoint=10, requested=84" in msg
+    assert "variant.num_atoms: checkpoint=51, requested=21" in msg
+
+    # a compatible re-save leaves the stored file untouched
+    save_run_spec(d, extended)
+    assert load_run_spec(d) == spec
+
+    # an incompatible spec may replace the stored one ONLY while no
+    # checkpoints sit beside it — otherwise a later --resume would
+    # restore the old run's carry under the new run's description
+    save_run_spec(d, changed)                  # no checkpoints yet: ok
+    save_run_spec(d, spec)                     # restore original
+    save_checkpoint(d, 20, {"w": jnp.ones((2,))})
+    with pytest.raises(SpecCompatError, match="fresh directory"):
+        save_run_spec(d, changed)
+    assert load_run_spec(d) == spec            # stored spec untouched
 
 
 def test_restore_onto_shardings(tmp_path):

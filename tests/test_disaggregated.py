@@ -20,7 +20,7 @@ import jax
 from repro.configs import reduced_config
 from repro.core.actor_learner import ALConfig
 from repro.core.disaggregated import DisaggregatedActorLearner
-from repro.models.layers import ExecConfig
+from repro.config import ExecConfig
 
 cfg = reduced_config("xlstm-125m")
 ec = ExecConfig(compute_dtype="float32", remat=False)
@@ -64,7 +64,7 @@ import jax
 from repro.configs import reduced_config
 from repro.core.actor_learner import ALConfig
 from repro.core.disaggregated import DisaggregatedActorLearner
-from repro.models.layers import ExecConfig
+from repro.config import ExecConfig
 
 cfg = reduced_config("xlstm-125m")
 ec = ExecConfig(compute_dtype="float32", remat=False)

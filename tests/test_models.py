@@ -11,7 +11,8 @@ import pytest
 from repro.configs import ARCH_IDS, reduced_config
 from repro.models import transformer as T
 from repro.models import moe as M
-from repro.models.layers import ExecConfig, softmax_cross_entropy
+from repro.config import ExecConfig
+from repro.models.layers import softmax_cross_entropy
 from repro.models.ssm import ssd_chunked
 
 EC = ExecConfig(compute_dtype="float32", remat=False)
@@ -121,3 +122,21 @@ def test_shared_attention_weights_are_shared():
     assert "shared_attn" in spec
     scanned = spec["layers"]
     assert not any("attn" in k and "mamba2" not in k for k in scanned)
+
+
+def test_layers_execconfig_reexport_deprecated():
+    """The historical `from repro.models.layers import ExecConfig` path
+    still resolves (to the repro.config class) but warns — new code
+    imports from repro.config."""
+    import warnings
+
+    import repro.config
+    import repro.models.layers as layers
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        assert layers.ExecConfig is repro.config.ExecConfig
+        assert layers.DEFAULT_EXEC is repro.config.DEFAULT_EXEC
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    with pytest.raises(AttributeError):
+        layers.NoSuchName

@@ -11,7 +11,7 @@ import numpy as np
 import pytest
 
 from repro.models import attention as A
-from repro.models.layers import ExecConfig
+from repro.config import ExecConfig
 
 
 def _with_host_devices(flags: str, n: int = 8) -> str:
@@ -51,7 +51,7 @@ from repro import compat
 from repro.configs import reduced_config
 from repro.models import moe as M
 from repro.models import params as PM
-from repro.models.layers import ExecConfig
+from repro.config import ExecConfig
 
 if jax.device_count() < 8:
     print("SKIP: only", jax.device_count(), "devices visible")

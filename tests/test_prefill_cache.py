@@ -16,7 +16,7 @@ import pytest
 
 from repro.configs import ARCH_IDS, reduced_config
 from repro.models import transformer as T
-from repro.models.layers import ExecConfig
+from repro.config import ExecConfig
 
 EC = ExecConfig(compute_dtype="float32", remat=False)
 

@@ -11,7 +11,7 @@ import jax
 import pytest
 
 from repro.configs import get_config
-from repro.models.layers import ExecConfig
+from repro.config import ExecConfig
 
 EC = ExecConfig()
 
@@ -84,7 +84,7 @@ import jax, jax.numpy as jnp
 from repro import compat
 from repro.config import TrainConfig
 from repro.configs import reduced_config
-from repro.models.layers import ExecConfig
+from repro.config import ExecConfig
 from repro.models import transformer as T
 from repro.launch.steps import make_train_step, abstract_train_state
 from repro.sharding.rules import param_shardings, input_shardings

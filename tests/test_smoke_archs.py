@@ -10,7 +10,7 @@ import pytest
 from repro.config import TrainConfig
 from repro.configs import ARCH_IDS, get_config, reduced_config
 from repro.models import transformer as T
-from repro.models.layers import ExecConfig
+from repro.config import ExecConfig
 from repro.launch.steps import make_serve_step, make_train_step
 
 EC = ExecConfig(compute_dtype="float32", remat=False)

@@ -9,7 +9,7 @@ import pytest
 from repro.configs import reduced_config
 from repro.models import params as PM
 from repro.models import xlstm as XL
-from repro.models.layers import ExecConfig
+from repro.config import ExecConfig
 
 EC = ExecConfig(compute_dtype="float32")
 
