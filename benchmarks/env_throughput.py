@@ -1,0 +1,163 @@
+"""Env-layer throughput: env-steps/sec per backend per game per W.
+
+ROADMAP direction 1 (mega-environment scale-out): the envs are pure-JAX
+state machines, so the W sampler axis is a vmap dimension that should
+scale to thousands of instances per device — the CuLE result (arXiv
+1907.08467) rebuilt on XLA. This benchmark measures exactly that lever:
+one jitted ``scan`` of W vmapped ``step_autoreset`` calls (uniform
+random actions, the sampler's autoreset semantics) per game, at W from
+8 to 4096, in three observation modes:
+
+* ``step``   — bare dynamics (the W-axis ceiling);
+* ``pixels`` — dynamics + native-size uint8 frame rendering (what the
+  pixel sampler pays per round);
+* ``vector`` — dynamics + ``EnvSpec.observe`` state vectors (the
+  PR-6 vector-observation path; note how much render cost it skips).
+
+A reward/observation checksum is threaded through the scan carry and
+returned, so XLA cannot dead-code-eliminate the work being timed.
+
+  PYTHONPATH=src python -m benchmarks.env_throughput            # full
+  PYTHONPATH=src python -m benchmarks.env_throughput --smoke    # CI
+
+Wired into ``benchmarks/run.py`` as the ``env_throughput`` section
+(``--record BENCH_<n>.json`` captures the trajectory).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs import ENVS
+from repro.envs.games import EnvSpec, step_autoreset
+from repro.envs.preprocess import obs_batch, pixel_obs, vector_obs
+
+W_GRID = (8, 256, 4096)          # the committed trajectory's W axis
+MODES = ("step", "pixels", "vector")
+
+
+def _make_run(spec: EnvSpec, W: int, mode: str, steps: int):
+    """The jitted W-env rollout: scan of vmapped autoreset steps."""
+    pipe = None
+    if mode == "pixels":
+        pipe = pixel_obs(spec.size)          # native-size frames
+    elif mode == "vector":
+        pipe = vector_obs(spec)
+
+    def body(carry, _):
+        states, acc, key = carry
+        key, ka, ks = jax.random.split(key, 3)
+        actions = jax.random.randint(ka, (W,), 0, spec.n_actions)
+        states, rewards, dones = jax.vmap(
+            lambda s, a, k: step_autoreset(spec, s, a, k)
+        )(states, actions, jax.random.split(ks, W))
+        acc = acc + jnp.sum(rewards)
+        if pipe is not None:
+            obs = obs_batch(pipe, spec, states)
+            acc = acc + jnp.sum(obs.astype(jnp.float32)) * 1e-6
+        return (states, acc, key), None
+
+    @jax.jit
+    def run(key):
+        kreset, krun = jax.random.split(key)
+        states = jax.vmap(spec.reset)(jax.random.split(kreset, W))
+        carry, _ = jax.lax.scan(body, (states, jnp.float32(0.0), krun),
+                                None, length=steps)
+        return carry[1]          # the checksum — forces all the work
+
+    return run
+
+
+def bench_one(spec: EnvSpec, W: int, mode: str, steps: int,
+              repeats: int = 3, seed: int = 0) -> Dict:
+    """Time one (game, W, mode) cell; returns a machine-readable row."""
+    run = _make_run(spec, W, mode, steps)
+    key = jax.random.PRNGKey(seed)
+    checksum = run(key).block_until_ready()      # compile + warmup
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        run(key).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    steps_per_s = W * steps / best
+    return {
+        "name": f"env_throughput_{spec.name}_{mode}_w{W}",
+        "game": spec.name, "mode": mode, "w": W, "steps": steps,
+        "us_per_call": best * 1e6,
+        "env_steps_per_s": steps_per_s,
+        "backend": jax.default_backend(),
+        "checksum": float(checksum),
+        "derived": f"env_steps_per_s={steps_per_s:.3e}",
+    }
+
+
+def run_benchmark(games: Optional[Sequence[str]] = None,
+                  ws: Sequence[int] = W_GRID,
+                  modes: Sequence[str] = MODES,
+                  steps: int = 128, repeats: int = 3) -> List[Dict]:
+    """The full (game x W x mode) grid as machine-readable rows."""
+    rows = []
+    for name in (games or sorted(ENVS)):
+        spec = ENVS[name] if name in ENVS else None
+        if spec is None:
+            raise ValueError(
+                f"unknown env {name!r}; available: {sorted(ENVS)}")
+        for W in ws:
+            for mode in modes:
+                rows.append(bench_one(spec, W, mode, steps, repeats))
+                r = rows[-1]
+                print(f"{r['name']:<44s} {r['env_steps_per_s']:12.3e} "
+                      f"env-steps/s  ({r['backend']})", flush=True)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="env-steps/sec per backend per game per W")
+    ap.add_argument("--games", default=None,
+                    help="comma-separated subset (default: all registered)")
+    ap.add_argument("--w", default=None,
+                    help=f"comma-separated W values (default "
+                         f"{','.join(map(str, W_GRID))})")
+    ap.add_argument("--modes", default=None,
+                    help=f"comma-separated subset of {MODES}")
+    ap.add_argument("--steps", type=int, default=128,
+                    help="scan length per timed call")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny W/steps, assert rows emit")
+    args = ap.parse_args(argv)
+
+    games = args.games.split(",") if args.games else None
+    ws = ([int(x) for x in args.w.split(",")] if args.w else W_GRID)
+    modes = tuple(args.modes.split(",")) if args.modes else MODES
+    for m in modes:
+        if m not in MODES:
+            raise SystemExit(f"unknown mode {m!r}; one of {MODES}")
+    steps, repeats = args.steps, args.repeats
+    if args.smoke:
+        games, ws, steps, repeats = None, (8,), 8, 1
+
+    rows = run_benchmark(games, ws, modes, steps, repeats)
+
+    if args.smoke:
+        # every registered game must produce a positive-throughput row
+        # in every mode — this is the CI contract
+        assert rows, "benchmark emitted no rows"
+        seen = {(r["game"], r["mode"]) for r in rows}
+        missing = [(g, m) for g in sorted(ENVS) for m in modes
+                   if (g, m) not in seen]
+        assert not missing, f"missing cells: {missing}"
+        assert all(r["env_steps_per_s"] > 0 for r in rows), rows
+        print(f"SMOKE OK: {len(rows)} rows, "
+              f"{len(set(r['game'] for r in rows))} games")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

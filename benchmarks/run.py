@@ -5,54 +5,86 @@ on stderr-ish sections). Fast by default; ``--full`` runs the larger
 Table-1 geometry (84x84 Nature CNN) and longer learning runs.
 
   PYTHONPATH=src python -m benchmarks.run [--full]
+  PYTHONPATH=src python -m benchmarks.run --sections env_throughput \
+      --record BENCH_7.json
+
+``--sections`` selects a comma-separated subset of {table1, transactions,
+table4, roofline, perf, env_throughput}; ``--record FILE`` additionally
+writes the rows as machine-readable JSON (name/us_per_call/derived plus
+run metadata) so successive ``BENCH_<n>.json`` files committed to the
+repo form a throughput trajectory across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+
+SECTIONS = ("table1", "transactions", "table4", "roofline", "perf",
+            "env_throughput")
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--skip-learning", action="store_true")
+    ap.add_argument("--sections", default=None,
+                    help=f"comma-separated subset of {','.join(SECTIONS)} "
+                         "(default: all)")
+    ap.add_argument("--record", default=None, metavar="FILE",
+                    help="also write rows + metadata as JSON to FILE")
     args = ap.parse_args(argv)
+
+    if args.sections is None:
+        sections = list(SECTIONS)
+    else:
+        sections = [s.strip() for s in args.sections.split(",") if s.strip()]
+        unknown = [s for s in sections if s not in SECTIONS]
+        if unknown:
+            ap.error(f"unknown sections {unknown}; choose from {SECTIONS}")
+    if args.skip_learning and "table4" in sections:
+        sections.remove("table4")
 
     rows = []
 
     # ------------------------------------------------------------------
     # Table 1-3: speed ablation (std/conc/sync/both x W)
     # ------------------------------------------------------------------
-    from benchmarks import table1_speed
-    steps = 2000 if args.full else 600
-    fs = 84 if args.full else 10
-    print(f"# Table 1 speed ablation ({steps} steps, frame {fs})",
-          flush=True)
-    t1 = table1_speed.run_table1(steps=steps, frame_size=fs)
-    print(table1_speed.format_tables(t1), flush=True)
-    for r in t1:
-        rows.append((f"table1_{r['variant']}_w{r['threads']}",
-                     r["us_per_step"], f"speedup={r['speedup']:.2f}x"))
+    if "table1" in sections:
+        from benchmarks import table1_speed
+        steps = 2000 if args.full else 600
+        fs = 84 if args.full else 10
+        print(f"# Table 1 speed ablation ({steps} steps, frame {fs})",
+              flush=True)
+        t1 = table1_speed.run_table1(steps=steps, frame_size=fs)
+        print(table1_speed.format_tables(t1), flush=True)
+        for r in t1:
+            rows.append((f"table1_{r['variant']}_w{r['threads']}",
+                         r["us_per_step"], f"speedup={r['speedup']:.2f}x"))
 
     # ------------------------------------------------------------------
     # Figure 3: transaction scaling
     # ------------------------------------------------------------------
-    from benchmarks import transactions
-    print("\n# Transaction scaling (sync => independent of W)", flush=True)
-    tx = transactions.main()
-    for r in tx:
-        rows.append((f"transactions_{'sync' if r['synchronized'] else 'std'}"
-                     f"_w{r['threads']}", 0.0,
-                     f"tx_per_step={r['tx_per_step']:.3f}"))
+    if "transactions" in sections:
+        from benchmarks import transactions
+        print("\n# Transaction scaling (sync => independent of W)",
+              flush=True)
+        tx = transactions.main()
+        for r in tx:
+            rows.append(
+                (f"transactions_{'sync' if r['synchronized'] else 'std'}"
+                 f"_w{r['threads']}", 0.0,
+                 f"tx_per_step={r['tx_per_step']:.3f}"))
 
     # ------------------------------------------------------------------
     # Table 4: learning performance across the env suite
     # ------------------------------------------------------------------
-    if not args.skip_learning:
+    if "table4" in sections:
         from benchmarks import table4_learning
         cycles = 80 if args.full else 40
-        print(f"\n# Table 4 learning proxy ({cycles} cycles/env)", flush=True)
+        print(f"\n# Table 4 learning proxy ({cycles} cycles/env)",
+              flush=True)
         t4 = table4_learning.main(cycles=cycles)
         for r in t4:
             rows.append((f"table4_{r['env']}", 0.0,
@@ -61,31 +93,63 @@ def main(argv=None) -> None:
     # ------------------------------------------------------------------
     # Roofline table (from the dry-run artifact)
     # ------------------------------------------------------------------
-    from benchmarks import roofline_table
-    print("\n# Roofline (single-pod 16x16 baseline, from dry-run)", flush=True)
-    rt = roofline_table.main()
-    for r in rt:
-        if "error" in r:
-            rows.append((f"roofline_{r['name']}", 0.0, "ERROR"))
-        else:
-            rows.append((f"roofline_{r['name']}", r["step_s"] * 1e6,
-                         f"dominant={r['dominant']}"))
+    if "roofline" in sections:
+        from benchmarks import roofline_table
+        print("\n# Roofline (single-pod 16x16 baseline, from dry-run)",
+              flush=True)
+        rt = roofline_table.main()
+        for r in rt:
+            if "error" in r:
+                rows.append((f"roofline_{r['name']}", 0.0, "ERROR"))
+            else:
+                rows.append((f"roofline_{r['name']}", r["step_s"] * 1e6,
+                             f"dominant={r['dominant']}"))
 
     # ------------------------------------------------------------------
     # §Perf iteration tables (baseline vs optimized variants)
     # ------------------------------------------------------------------
-    from benchmarks import perf_table
-    print("\n# Perf iterations (dry-run variants; see EXPERIMENTS.md §Perf)",
-          flush=True)
-    pt = perf_table.main()
-    for r in pt:
-        rows.append((f"perf_{r['pair']}_{r['variant']}", r["step_s"] * 1e6,
-                     f"speedup={r['speedup']:.2f}x"))
+    if "perf" in sections:
+        from benchmarks import perf_table
+        print("\n# Perf iterations (dry-run variants; see EXPERIMENTS.md "
+              "§Perf)", flush=True)
+        pt = perf_table.main()
+        for r in pt:
+            rows.append((f"perf_{r['pair']}_{r['variant']}",
+                         r["step_s"] * 1e6, f"speedup={r['speedup']:.2f}x"))
+
+    # ------------------------------------------------------------------
+    # Env-layer throughput: env-steps/sec per game per W per obs mode
+    # ------------------------------------------------------------------
+    if "env_throughput" in sections:
+        from benchmarks import env_throughput
+        steps = 256 if args.full else 128
+        print(f"\n# Env throughput (W grid {env_throughput.W_GRID}, "
+              f"{steps}-step scans)", flush=True)
+        et = env_throughput.run_benchmark(steps=steps)
+        for r in et:
+            rows.append((r["name"], r["us_per_call"], r["derived"]))
 
     # ------------------------------------------------------------------
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
+
+    if args.record:
+        import jax
+        payload = {
+            "meta": {
+                "argv": list(argv) if argv is not None else sys.argv[1:],
+                "backend": jax.default_backend(),
+                "jax_version": jax.__version__,
+                "sections": sections,
+            },
+            "rows": [{"name": n, "us_per_call": round(us, 2),
+                      "derived": d} for n, us, d in rows],
+        }
+        with open(args.record, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"recorded {len(rows)} rows -> {args.record}", flush=True)
 
 
 if __name__ == "__main__":

@@ -110,13 +110,21 @@ class ExperimentSpec:
     """
 
     env: str = "catch"            # envs/games.py registry name
+    # Static EnvParams overrides for the env (envs/games.py dataclasses):
+    # e.g. {"size": 16, "paddle_width": 5}. {} = the game's defaults.
+    env_params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     mode: str = "population"      # one of MODES
     variant: VariantConfig = VariantConfig()
     envs: int = 8                 # W sampler streams
+    # What one observation is: "pixels" (rendered uint8 frames, the
+    # paper's pipeline) or "vector" (EnvSpec.observe state vectors, the
+    # deep_q_rl machine-state lineage).
+    obs_mode: str = "pixels"
     frame_size: int = 10          # 10 (MinAtar grids) or 84 (Nature geometry)
     # Q-network geometry preset (configs/dqn_nature.cnn_geometry):
-    # "auto" = frame_size pick (10 -> "small", 84 -> "nature");
-    # "tiny" is the dryrun/tests network.
+    # "auto" = frame_size pick (10 -> "small", 84 -> "nature") or, under
+    # obs_mode="vector", the fc-only "mlp"; "tiny"/"mlp_tiny" are the
+    # dryrun/tests networks.
     net: str = "auto"
     seed: int = 0                 # base replica seed (replica r: seed + r)
     seeds: int = 1                # population size P (population mode)
@@ -130,19 +138,44 @@ class ExperimentSpec:
 
     def validate(self) -> None:
         from repro.configs.dqn_nature import NET_PRESETS
-        from repro.envs import ENVS
+        from repro.envs import make_env
         if self.mode not in MODES:
             raise ValueError(f"unknown mode {self.mode!r}; one of {MODES}")
-        if self.env not in ENVS:
+        # unknown games / unknown param names / out-of-range values all
+        # raise ValueError messages listing what IS valid (games.make_env)
+        env = make_env(self.env, **self.env_params)
+        if self.obs_mode not in ("pixels", "vector"):
             raise ValueError(
-                f"unknown env {self.env!r}; available: {sorted(ENVS)}")
+                f"unknown obs_mode {self.obs_mode!r}; one of "
+                "('pixels', 'vector')")
         if self.net not in NET_PRESETS:
             raise ValueError(
                 f"unknown net {self.net!r}; one of {NET_PRESETS}")
-        if self.net == "auto" and self.frame_size not in (10, 84):
+        mlp_net = self.net in ("mlp", "mlp_tiny")
+        if self.obs_mode == "vector" and not (mlp_net or self.net == "auto"):
             raise ValueError(
-                f"net='auto' resolves on frame_size 10 or 84, got "
-                f"{self.frame_size}; pick an explicit net preset")
+                f"obs_mode='vector' feeds flat state vectors; net "
+                f"{self.net!r} is a conv preset — use net='auto', 'mlp' "
+                "or 'mlp_tiny'")
+        if self.obs_mode == "pixels" and mlp_net:
+            raise ValueError(
+                f"net {self.net!r} consumes vector observations; set "
+                "obs_mode='vector' (or pick a conv preset)")
+        if self.obs_mode == "pixels":
+            if self.net == "auto" and self.frame_size not in (10, 84):
+                raise ValueError(
+                    f"net='auto' resolves on frame_size 10 or 84, got "
+                    f"{self.frame_size}; pick an explicit net preset")
+            if self.frame_size == 84 and env.size != 10:
+                raise ValueError(
+                    f"frame_size=84 assumes a 10x10 grid (8x upscale); "
+                    f"env {self.env!r} with size={env.size} renders "
+                    f"natively — set frame_size={env.size}")
+            if self.frame_size not in (84, env.size):
+                raise ValueError(
+                    f"frame_size={self.frame_size} matches neither the "
+                    f"env grid (size={env.size}) nor the 84x84 Nature "
+                    "geometry")
         if self.algo.optimizer not in ("adamw", "rmsprop"):
             raise ValueError(
                 f"unknown optimizer {self.algo.optimizer!r}; "
@@ -159,11 +192,20 @@ class ExperimentSpec:
 
     # -- derived runtime configs ------------------------------------------
 
+    def obs_dim(self) -> int:
+        """The env's vector-observation width under obs_mode='vector',
+        else 0 (pixel mode)."""
+        if self.obs_mode != "vector":
+            return 0
+        from repro.envs import make_env
+        return make_env(self.env, **self.env_params).obs_dim
+
     def cnn_config(self, n_actions: int):
         """The ``NatureCNNConfig`` this spec implies (geometry preset +
         the variant's head selection)."""
         from repro.configs.dqn_nature import cnn_config_for, cnn_geometry
-        base = cnn_geometry(self.net, self.frame_size, n_actions)
+        base = cnn_geometry(self.net, self.frame_size, n_actions,
+                            obs_dim=self.obs_dim())
         return cnn_config_for(self.variant, base)
 
     def dqn_config(self) -> DQNConfig:
@@ -174,7 +216,8 @@ class ExperimentSpec:
         eps_anneal = algo.eps_anneal_steps or max(
             sched.cycles * sched.cycle_steps // 2, 1)
         from repro.configs.dqn_nature import cnn_geometry
-        frame_stack = cnn_geometry(self.net, self.frame_size, 1).frame_stack
+        frame_stack = cnn_geometry(self.net, self.frame_size, 1,
+                                   obs_dim=self.obs_dim()).frame_stack
         return DQNConfig(
             minibatch_size=algo.minibatch_size,
             replay_capacity=algo.replay_capacity,

@@ -73,7 +73,8 @@ from repro.core.population import (eval_keys, make_population_cycle,
                                    population_init, replica_mesh, seed_array)
 from repro.core.replay import replay_init
 from repro.core.synchronized import evaluate, sampler_init
-from repro.envs import get_env
+from repro.envs import make_env
+from repro.envs.preprocess import pixel_obs, vector_obs
 from repro.models.nature_cnn import q_forward, q_init, q_logits
 from repro.optim import adamw, centered_rmsprop
 
@@ -142,10 +143,14 @@ def build_trainer(spec: ExperimentSpec) -> Trainer:
 # ---------------------------------------------------------------------------
 
 class _Components:
-    """env spec + network/DQN configs + forward fns + optimizer."""
+    """env spec + obs pipeline + network/DQN configs + forward fns +
+    optimizer."""
 
     def __init__(self, spec: ExperimentSpec):
-        self.env = get_env(spec.env)
+        self.env = make_env(spec.env, **spec.env_params)
+        # the observation pipeline every sampler/eval path consumes
+        self.obs = (vector_obs(self.env) if spec.obs_mode == "vector"
+                    else pixel_obs(spec.frame_size))
         self.ncfg = spec.cnn_config(self.env.n_actions)
         self.dcfg = spec.dqn_config()
         ec = spec.exec
@@ -186,17 +191,17 @@ class PopulationTrainer:
         c = _Components(spec)
         self._c = c
         self.seeds = seed_array(spec.seed, spec.seeds)
-        fs = spec.frame_size
-        init_one = make_replica_init(c.env, c.q_init, c.qf, c.opt, c.dcfg, fs)
+        init_one = make_replica_init(c.env, c.q_init, c.qf, c.opt, c.dcfg,
+                                     c.obs)
         self._init = lambda: population_init(init_one, self.seeds)
         mesh = replica_mesh(spec.seeds)
         self.cycle = jax.jit(make_population_cycle(
-            c.env, c.qf, c.opt, c.dcfg, frame_size=fs,
+            c.env, c.qf, c.opt, c.dcfg, obs=c.obs,
             kernel_backend=spec.exec.kernel_backend, q_logits=c.qlog,
             mesh=mesh))
         self._eval = jax.jit(lambda p, k: population_evaluate(
             c.env, c.qf, p, k, c.dcfg,
-            n_episodes=spec.schedule.eval_episodes, frame_size=fs,
+            n_episodes=spec.schedule.eval_episodes, obs=c.obs,
             max_steps=c.env.max_steps + 2))
 
     def init_carry(self, key: Optional[jax.Array] = None) -> TrainerCarry:
@@ -239,7 +244,7 @@ class _SingleReplicaTrainer:
         self._eval = jax.jit(lambda p, k: evaluate(
             c.env, c.qf, p, k, c.dcfg,
             n_episodes=spec.schedule.eval_episodes,
-            frame_size=spec.frame_size, max_steps=c.env.max_steps + 2))
+            obs=c.obs, max_steps=c.env.max_steps + 2))
         self._build(spec, c)
 
     def _build(self, spec: ExperimentSpec, c: _Components) -> None:
@@ -278,10 +283,10 @@ class ConcurrentTrainer(_SingleReplicaTrainer):
 
     def _build(self, spec: ExperimentSpec, c: _Components) -> None:
         init_one = make_replica_init(c.env, c.q_init, c.qf, c.opt,
-                                     c.dcfg, spec.frame_size)
+                                     c.dcfg, c.obs)
         self._init = lambda: init_one(jnp.int32(spec.seed))
         cycle_fn = make_concurrent_cycle(
-            c.env, c.qf, c.opt, c.dcfg, frame_size=spec.frame_size,
+            c.env, c.qf, c.opt, c.dcfg, obs=c.obs,
             kernel_backend=spec.exec.kernel_backend, q_logits=c.qlog)
 
         def cycle1(carry):
@@ -331,9 +336,9 @@ class _SequentialTrainer(_SingleReplicaTrainer):
         super().__init__(spec)
 
     def _build(self, spec: ExperimentSpec, c: _Components) -> None:
-        fs = spec.frame_size
+        pipe = c.obs
         chunk = make_baseline_chunk(c.env, c.qf, c.opt, c.dcfg,
-                                    frame_size=fs,
+                                    obs=pipe,
                                     chunk_steps=spec.schedule.cycle_steps)
 
         def cycle1(carry):
@@ -343,13 +348,18 @@ class _SequentialTrainer(_SingleReplicaTrainer):
         self.cycle = jax.jit(cycle1)
 
         def init() -> BaselineCarry:
-            key = jax.random.PRNGKey(jnp.int32(spec.seed))
-            params = c.q_init(key)
+            # split once, derive per-purpose: network init and the
+            # sampler's episode streams must not draw the same bits
+            # (same discipline as population.make_replica_init)
+            kinit, ksampler = jax.random.split(
+                jax.random.PRNGKey(jnp.int32(spec.seed)))
+            params = c.q_init(kinit)
             replay = replay_init(c.dcfg.replay_capacity,
-                                 (fs, fs, c.dcfg.frame_stack))
-            sampler = sampler_init(c.env, c.dcfg, key, fs)
+                                 pipe.shape + (c.dcfg.frame_stack,),
+                                 obs_dtype=pipe.dtype)
+            sampler = sampler_init(c.env, c.dcfg, ksampler, pipe)
             replay, sampler = prepopulate(c.env, c.qf, c.dcfg, replay,
-                                          sampler, c.dcfg.prepopulate, fs)
+                                          sampler, c.dcfg.prepopulate, pipe)
             return BaselineCarry(params, params, c.opt.init(params), replay,
                                  sampler, jnp.int32(0), jnp.int32(0))
 

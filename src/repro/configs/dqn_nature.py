@@ -18,6 +18,11 @@ from repro.config import VariantConfig
 class NatureCNNConfig:
     frame_size: int = 84
     frame_stack: int = 4
+    # Vector-observation mode (PR 6): >0 means the per-frame observation
+    # is a flat (vector_dim,) float32 state vector (EnvSpec.observe) —
+    # the conv stack is skipped and the trunk is fc-only on the
+    # (vector_dim * frame_stack) concatenation. 0 = pixel mode.
+    vector_dim: int = 0
     # (out_channels, kernel, stride) per conv layer
     convs: Tuple[Tuple[int, int, int], ...] = ((32, 8, 4), (64, 4, 2), (64, 3, 1))
     hidden: int = 512
@@ -42,19 +47,35 @@ CONFIG = NatureCNNConfig()
 # hand-built their NatureCNNConfig (and drifted); the ExperimentSpec
 # (repro.api) names a preset instead and both launchers resolve it here.
 # ---------------------------------------------------------------------------
-NET_PRESETS = ("auto", "nature", "small", "tiny")
+NET_PRESETS = ("auto", "nature", "small", "tiny", "mlp", "mlp_tiny")
 
 
-def cnn_geometry(net: str, frame_size: int, n_actions: int) -> NatureCNNConfig:
+def cnn_geometry(net: str, frame_size: int, n_actions: int,
+                 obs_dim: int = 0) -> NatureCNNConfig:
     """The base (variant-free) network geometry a preset names.
 
     ``auto`` picks by input geometry: 10x10 MinAtar grids get the
-    2-conv ``small`` net, 84x84 the exact Nature stack. ``tiny`` is the
-    single-conv net the dryrun/test harnesses compile (seconds, not
-    minutes). Apply :func:`cnn_config_for` on top for the variant's
-    head selection."""
+    2-conv ``small`` net, 84x84 the exact Nature stack, and a vector
+    observation (``obs_dim > 0``) the fc-only ``mlp`` net. ``tiny`` is
+    the single-conv net the dryrun/test harnesses compile (seconds, not
+    minutes); ``mlp``/``mlp_tiny`` are the vector-mode analogues of
+    ``small``/``tiny``. Apply :func:`cnn_config_for` on top for the
+    variant's head selection."""
     if net == "auto":
-        net = "small" if frame_size == 10 else "nature"
+        if obs_dim > 0:
+            net = "mlp"
+        else:
+            net = "small" if frame_size == 10 else "nature"
+    if net in ("mlp", "mlp_tiny"):
+        if obs_dim <= 0:
+            raise ValueError(
+                f"net preset {net!r} consumes vector observations; it "
+                "needs the env's obs_dim (obs_mode='vector' in the "
+                "ExperimentSpec)")
+        hidden = 128 if net == "mlp" else 32
+        return NatureCNNConfig(
+            frame_size=frame_size, frame_stack=2, convs=(),
+            hidden=hidden, n_actions=n_actions, vector_dim=obs_dim)
     if net == "nature":
         return NatureCNNConfig(
             frame_size=frame_size, frame_stack=4,

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from repro.config import DQNConfig
 from repro.core.dqn import make_update_fn
 from repro.core.replay import ReplayState, replay_add_batch, replay_sample
-from repro.core.synchronized import SamplerState, sync_round
+from repro.core.synchronized import Obs, SamplerState, sync_round
 from repro.envs.games import EnvSpec
 from repro.optim.schedule import linear_epsilon
 
@@ -46,7 +46,7 @@ class BaselineCarry(NamedTuple):
 
 
 def make_baseline_chunk(spec: EnvSpec, q_forward: Callable, opt,
-                        cfg: DQNConfig, frame_size: int = 84,
+                        cfg: DQNConfig, obs: Obs = 84,
                         chunk_steps: int = 0) -> Callable:
     """Jitted runner for `chunk_steps` timesteps of standard DQN."""
     W = cfg.n_envs
@@ -72,8 +72,7 @@ def make_baseline_chunk(spec: EnvSpec, q_forward: Callable, opt,
         def sample_body(s_replay, i):
             s, replay = s_replay
             eps = eps_fn(carry.step + i * W)
-            s, tr = sync_round(spec, q_forward, carry.params, s, eps,
-                               frame_size)
+            s, tr = sync_round(spec, q_forward, carry.params, s, eps, obs)
             # standard DQN: experiences enter 𝒟 immediately
             flat = {k: v for k, v in tr.items()}
             replay = replay_add_batch(replay, flat)

@@ -52,7 +52,8 @@ from repro.core.dqn import make_update_fn
 from repro.core.replay import (ReplayState, per_flush_priorities, per_sample,
                                per_stage_priorities, per_tree,
                                replay_add_batch, replay_sample)
-from repro.core.synchronized import SamplerState, nstep_aggregate, sync_round
+from repro.core.synchronized import (Obs, SamplerState, nstep_aggregate,
+                                     sync_round)
 from repro.envs.games import EnvSpec
 from repro.optim.schedule import linear_epsilon
 
@@ -87,7 +88,7 @@ EVAL_STREAM_TAG = 29
 
 
 def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
-                          cfg: DQNConfig, frame_size: int = 84,
+                          cfg: DQNConfig, obs: Obs = 84,
                           cycle_steps: int = 0,
                           kernel_backend: Optional[str] = None,
                           q_logits: Optional[Callable] = None) -> Callable:
@@ -128,8 +129,7 @@ def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
         def sample_body(s, i):
             eps = (jnp.float32(0.0) if variant.noisy
                    else eps_fn(carry.step + i * W))
-            s, tr = sync_round(spec, qf_act, target_params, s, eps,
-                               frame_size)
+            s, tr = sync_round(spec, qf_act, target_params, s, eps, obs)
             return s, tr
 
         sampler, staged = jax.lax.scan(
@@ -210,7 +210,7 @@ def make_concurrent_cycle(spec: EnvSpec, q_forward: Callable, opt,
 
 def prepopulate(spec: EnvSpec, q_forward: Callable, cfg: DQNConfig,
                 replay: ReplayState, sampler: SamplerState,
-                n: int, frame_size: int = 84):
+                n: int, obs: Obs = 84):
     """Fill 𝒟 with at least n uniform-random transitions (the paper's
     N=50 000). On a prioritized replay the slots enter at max priority
     (1.0 before any TD error has been observed).
@@ -227,7 +227,7 @@ def prepopulate(spec: EnvSpec, q_forward: Callable, cfg: DQNConfig,
     zero_q = lambda params, obs: jnp.zeros((obs.shape[0], spec.n_actions))
 
     def body(s, _):
-        s, tr = sync_round(spec, zero_q, None, s, jnp.float32(1.0), frame_size)
+        s, tr = sync_round(spec, zero_q, None, s, jnp.float32(1.0), obs)
         return s, tr
 
     sampler, staged = jax.lax.scan(body, sampler, None, length=rounds)

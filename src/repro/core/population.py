@@ -48,8 +48,9 @@ from repro.core.concurrent import (EVAL_STREAM_TAG, TrainerCarry,
                                    make_concurrent_cycle, prepopulate,
                                    replica_key)
 from repro.core.replay import replay_init
-from repro.core.synchronized import evaluate, sampler_init
+from repro.core.synchronized import Obs, evaluate, sampler_init
 from repro.envs.games import EnvSpec
+from repro.envs.preprocess import as_obs
 
 __all__ = [
     "seed_array", "make_replica_init", "population_init",
@@ -65,25 +66,32 @@ def seed_array(base_seed: int, n: int) -> jax.Array:
 
 def make_replica_init(spec: EnvSpec, q_init_fn: Callable,
                       q_forward: Callable, opt, cfg: DQNConfig,
-                      frame_size: int = 84) -> Callable:
+                      obs: Obs = 84) -> Callable:
     """Build ``init_one(seed) -> TrainerCarry``: params, optimizer state,
     replay (prepopulated with ``cfg.prepopulate`` uniform-random
     transitions) and sampler streams, all derived from ``PRNGKey(seed)``.
 
     ``q_init_fn(key) -> params``. The same function defines both the
     standalone single-seed init and (vmapped by ``population_init``) the
-    population init, so the two cannot drift."""
+    population init, so the two cannot drift.
+
+    The seed key is split once and each consumer gets its own half —
+    network init and the sampler's reset streams must never draw the
+    same bits (the PR-6 RNG audit: the seed-era code passed ``key`` to
+    both, aliasing the init randomness with episode randomness)."""
+    pipe = as_obs(obs)
 
     def init_one(seed: jax.Array) -> TrainerCarry:
         seed = jnp.asarray(seed, jnp.int32)
-        key = jax.random.PRNGKey(seed)
-        params = q_init_fn(key)
+        kinit, ksampler = jax.random.split(jax.random.PRNGKey(seed))
+        params = q_init_fn(kinit)
         replay = replay_init(
-            cfg.replay_capacity, (frame_size, frame_size, cfg.frame_stack),
+            cfg.replay_capacity, pipe.shape + (cfg.frame_stack,),
+            obs_dtype=pipe.dtype,
             prioritized=cfg.variant.prioritized)
-        sampler = sampler_init(spec, cfg, key, frame_size)
+        sampler = sampler_init(spec, cfg, ksampler, pipe)
         replay, sampler = prepopulate(spec, q_forward, cfg, replay, sampler,
-                                      cfg.prepopulate, frame_size)
+                                      cfg.prepopulate, pipe)
         return TrainerCarry(params, opt.init(params), replay, sampler,
                             jnp.int32(0), seed)
 
@@ -112,7 +120,7 @@ def replica_mesh(n_replicas: int, devices: Optional[Sequence] = None):
 
 
 def make_population_cycle(spec: EnvSpec, q_forward: Callable, opt,
-                          cfg: DQNConfig, frame_size: int = 84,
+                          cfg: DQNConfig, obs: Obs = 84,
                           cycle_steps: int = 0,
                           kernel_backend: Optional[str] = None,
                           q_logits: Optional[Callable] = None,
@@ -124,7 +132,7 @@ def make_population_cycle(spec: EnvSpec, q_forward: Callable, opt,
     independent). Returns cycle(carry) -> (carry', metrics) where every
     metric has leading dim P."""
     cycle = make_concurrent_cycle(spec, q_forward, opt, cfg,
-                                  frame_size=frame_size,
+                                  obs=obs,
                                   cycle_steps=cycle_steps,
                                   kernel_backend=kernel_backend,
                                   q_logits=q_logits)
@@ -147,7 +155,7 @@ def eval_keys(seeds: jax.Array, step) -> jax.Array:
 
 def population_evaluate(spec: EnvSpec, q_forward: Callable, params,
                         keys: jax.Array, cfg: DQNConfig,
-                        n_episodes: int = 30, frame_size: int = 84,
+                        n_episodes: int = 30, obs: Obs = 84,
                         max_steps: Optional[int] = None) -> jax.Array:
     """Per-replica ε=0.05 evaluation: (P,) finished-episode-aware mean
     returns. ``max_steps`` defaults to the env's own episode bound so
@@ -156,5 +164,5 @@ def population_evaluate(spec: EnvSpec, q_forward: Callable, params,
         max_steps = spec.max_steps + 2
     return jax.vmap(
         lambda p, k: evaluate(spec, q_forward, p, k, cfg,
-                              n_episodes=n_episodes, frame_size=frame_size,
+                              n_episodes=n_episodes, obs=obs,
                               max_steps=max_steps))(params, keys)

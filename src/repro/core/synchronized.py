@@ -14,52 +14,58 @@ concurrent.py) is the sampler loop of Algorithm 1.
 
 from __future__ import annotations
 
-from typing import Callable, Dict, NamedTuple, Tuple
+from typing import Callable, Dict, NamedTuple, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import DQNConfig
 from repro.envs.games import EnvSpec, step_autoreset
-from repro.envs.preprocess import (push_frame, render_batch, reset_stack_where)
+from repro.envs.preprocess import (ObsPipeline, as_obs, init_obs_stack,
+                                   obs_batch, push_frame, reset_stack_where)
 from repro.core.dqn import egreedy
+
+# ``obs`` arguments below accept a plain int (legacy pixel frame size)
+# or an ObsPipeline (pixels | vector) — see envs/preprocess.py.
+Obs = Union[int, ObsPipeline]
 
 
 class SamplerState(NamedTuple):
     env_states: Dict[str, jax.Array]   # vmapped env states (leading W)
-    stack: jax.Array                   # (W, S, S, K) uint8 — current obs
+    stack: jax.Array                   # (W, *obs, K) — current obs stack
     key: jax.Array
 
 
 def sampler_init(spec: EnvSpec, cfg: DQNConfig, key: jax.Array,
-                 frame_size: int = 84) -> SamplerState:
+                 obs: Obs = 84) -> SamplerState:
+    pipe = as_obs(obs)
     kreset, kstate = jax.random.split(key)
     env_states = jax.vmap(spec.reset)(jax.random.split(kreset, cfg.n_envs))
-    stack = jnp.zeros((cfg.n_envs, frame_size, frame_size, cfg.frame_stack),
-                      jnp.uint8)
-    frame = render_batch(spec, env_states, frame_size)
+    stack = init_obs_stack(cfg.n_envs, pipe, cfg.frame_stack)
+    frame = obs_batch(pipe, spec, env_states)
     stack = push_frame(stack, frame)
     return SamplerState(env_states, stack, kstate)
 
 
 def sync_round(spec: EnvSpec, q_forward: Callable, params,
                s: SamplerState, eps: jax.Array,
-               frame_size: int = 84) -> Tuple[SamplerState, Dict[str, jax.Array]]:
+               obs: Obs = 84) -> Tuple[SamplerState, Dict[str, jax.Array]]:
     """One synchronized W-env step. Returns (state', transitions) where
     transitions have leading dim W. The single q_forward call is the
     paper's one-transaction-per-round property."""
+    pipe = as_obs(obs)
     key, kact, kstep = jax.random.split(s.key, 3)
-    obs = s.stack                                           # (W, S, S, K)
-    qvals = q_forward(params, obs)                          # ONE batched call
+    cur = s.stack                                           # (W, *obs, K)
+    qvals = q_forward(params, cur)                          # ONE batched call
     actions = egreedy(qvals, eps, kact)
     W = actions.shape[0]
     env_states, rewards, dones = jax.vmap(
         lambda st, a, k: step_autoreset(spec, st, a, k)
     )(s.env_states, actions, jax.random.split(kstep, W))
-    frame = render_batch(spec, env_states, frame_size)
+    frame = obs_batch(pipe, spec, env_states)
     next_obs = push_frame(s.stack, frame)                   # pre-reset view
     new_stack = push_frame(reset_stack_where(s.stack, dones), frame)
-    transitions = {"obs": obs, "action": actions, "reward": rewards,
+    transitions = {"obs": cur, "action": actions, "reward": rewards,
                    "next_obs": next_obs, "done": dones}
     return SamplerState(env_states, new_stack, key), transitions
 
@@ -106,7 +112,7 @@ def nstep_aggregate(staged: Dict[str, jax.Array], n: int,
 
 
 def evaluate(spec: EnvSpec, q_forward: Callable, params, key: jax.Array,
-             cfg: DQNConfig, n_episodes: int = 30, frame_size: int = 84,
+             cfg: DQNConfig, n_episodes: int = 30, obs: Obs = 84,
              max_steps: int = 1000) -> jax.Array:
     """ε=0.05 greedy evaluation (paper §5.2): mean episode return over
     n_episodes parallel evaluation streams.
@@ -118,17 +124,17 @@ def evaluate(spec: EnvSpec, q_forward: Callable, params, key: jax.Array,
     partial-return mean is returned as a fallback (callers should size
     ``max_steps`` from ``spec.max_steps`` so this never triggers)."""
     eval_cfg = cfg
+    pipe = as_obs(obs)
     kinit, krun = jax.random.split(key)
     env_states = jax.vmap(spec.reset)(jax.random.split(kinit, n_episodes))
-    stack = jnp.zeros((n_episodes, frame_size, frame_size, cfg.frame_stack),
-                      jnp.uint8)
-    stack = push_frame(stack, render_batch(spec, env_states, frame_size))
+    stack = init_obs_stack(n_episodes, pipe, cfg.frame_stack)
+    stack = push_frame(stack, obs_batch(pipe, spec, env_states))
     s = SamplerState(env_states, stack, krun)
 
     def body(carry, _):
         s, ret, live = carry
         s2, tr = sync_round(spec, q_forward, params, s,
-                            jnp.float32(eval_cfg.eval_eps), frame_size)
+                            jnp.float32(eval_cfg.eval_eps), pipe)
         ret = ret + tr["reward"] * live
         live = live * (1.0 - tr["done"].astype(jnp.float32))
         return (s2, ret, live), None

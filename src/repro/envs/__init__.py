@@ -1,1 +1,2 @@
-from repro.envs.games import ENVS, EnvSpec, get_env  # noqa: F401
+from repro.envs.games import (ENVS, GAMES, EnvParams, EnvSpec,  # noqa: F401
+                              get_env, make_env)

@@ -1,30 +1,137 @@
-"""Pure-JAX vectorized environments (MinAtar-style 10x10 grids).
+"""Pure-JAX vectorized environments (MinAtar-style grids), parameterized.
 
 The paper's substrate is ALE/Atari via OpenAI Gym — a C++ emulator that
 cannot ship here. These environments reproduce every *systems* property
 the paper relies on: pixel observations, episodic structure, stochastic
 transitions, CPU-side stepping cost, and batched vectorization across W
-sampler streams. Each env is a pair of pure functions and vmaps cleanly.
+sampler streams. Each env is a set of pure functions closed over a
+frozen :class:`EnvParams`, so every knob (grid ``size``, paddle width,
+ball speed, brick rows, ...) is a *static* compile-time constant and the
+whole game vmaps/jits cleanly — the CuLE design (arXiv 1907.08467) that
+lets thousands of instances run per device.
 
 API (all pure):
-    spec = get_env("catch")
+    spec = get_env("catch")                  # default params
+    spec = make_env("catch", size=16, paddle_width=5)
     state = spec.reset(key)
     state, reward, done = spec.step(state, action, key)
-    grid = spec.render(state)            # (size, size, channels) float32
+    grid = spec.render(state)                # (size, size, channels) f32
+    vec = spec.observe(state)                # (obs_dim,) float32 in [0,1]
 Auto-reset composition lives in ``step_autoreset``.
+
+RNG discipline: every key entering ``reset``/``step`` is split once at
+the top and each sub-draw gets its own derived key; ``step_autoreset``
+splits its key into (step, reset) halves so step randomness never
+aliases reset randomness.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, ClassVar, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-SIZE = 10
+SIZE = 10          # default grid size (the seed repo's only size)
 State = Dict[str, Any]
 
+
+# ---------------------------------------------------------------------------
+# Parameter dataclasses
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EnvParams:
+    """Static per-game knobs, closed over by the game's pure functions.
+
+    ``max_steps = 0`` means "derive from ``size``" (each game documents
+    its scaling); any positive value is used verbatim. Subclasses extend
+    ``RANGES`` with their own fields — the ranges double as the
+    validation table and as the text of launcher error messages.
+    """
+
+    size: int = SIZE
+    max_steps: int = 0
+
+    RANGES: ClassVar[Dict[str, Tuple[float, float]]] = {
+        "size": (4, 64),
+        "max_steps": (0, 100_000),
+    }
+
+    @classmethod
+    def describe(cls) -> str:
+        """Human-readable field/range listing for error messages."""
+        parts = []
+        for f in dataclasses.fields(cls):
+            lo, hi = cls.RANGES[f.name]
+            note = " (0=auto)" if f.name == "max_steps" else ""
+            parts.append(f"{f.name}∈[{lo}, {hi}] default={f.default}{note}")
+        return ", ".join(parts)
+
+    def validate(self, game: str) -> None:
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            lo, hi = self.RANGES[f.name]
+            if not (lo <= v <= hi):
+                raise ValueError(
+                    f"env {game!r}: param {f.name}={v!r} outside valid "
+                    f"range [{lo}, {hi}]; valid params: {self.describe()}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CatchParams(EnvParams):
+    paddle_width: int = 3        # odd; catch rule is |ball-paddle| <= w//2
+    ball_speed: int = 1          # rows fallen per step
+
+    RANGES: ClassVar[Dict[str, Tuple[float, float]]] = {
+        **EnvParams.RANGES, "paddle_width": (1, 63), "ball_speed": (1, 3)}
+
+
+@dataclasses.dataclass(frozen=True)
+class BreakoutParams(EnvParams):
+    brick_rows: int = 3
+    paddle_width: int = 3
+
+    RANGES: ClassVar[Dict[str, Tuple[float, float]]] = {
+        **EnvParams.RANGES, "brick_rows": (1, 61), "paddle_width": (1, 63)}
+
+
+@dataclasses.dataclass(frozen=True)
+class PongParams(EnvParams):
+    paddle_width: int = 3
+
+    RANGES: ClassVar[Dict[str, Tuple[float, float]]] = {
+        **EnvParams.RANGES, "paddle_width": (1, 63)}
+
+
+@dataclasses.dataclass(frozen=True)
+class SeekerParams(EnvParams):
+    n_hazards: int = 1
+
+    RANGES: ClassVar[Dict[str, Tuple[float, float]]] = {
+        **EnvParams.RANGES, "n_hazards": (1, 16)}
+
+
+@dataclasses.dataclass(frozen=True)
+class FreewayParams(EnvParams):
+    car_speed: int = 1
+
+    RANGES: ClassVar[Dict[str, Tuple[float, float]]] = {
+        **EnvParams.RANGES, "car_speed": (1, 3)}
+
+
+@dataclasses.dataclass(frozen=True)
+class DodgeParams(EnvParams):
+    spawn_prob: float = 0.25     # per-column obstacle spawn probability
+
+    RANGES: ClassVar[Dict[str, Tuple[float, float]]] = {
+        **EnvParams.RANGES, "spawn_prob": (0.0, 0.9)}
+
+
+# ---------------------------------------------------------------------------
+# EnvSpec
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class EnvSpec:
@@ -36,196 +143,424 @@ class EnvSpec:
     step: Callable[[State, jax.Array, jax.Array], Tuple[State, jax.Array, jax.Array]]
     render: Callable[[State], jax.Array]
     size: int = SIZE
+    # dual-observation mode: observe(state) -> (obs_dim,) float32 in [0,1]
+    observe: Optional[Callable[[State], jax.Array]] = None
+    obs_dim: int = 0
+    params: Optional[EnvParams] = None
+    reward_range: Tuple[float, float] = (-1.0, 1.0)
 
 
 def _i32(x):
     return jnp.asarray(x, jnp.int32)
 
 
+def _f32(*parts) -> jax.Array:
+    """Concatenate scalars/vectors into one flat float32 vector."""
+    return jnp.concatenate(
+        [jnp.ravel(jnp.asarray(p, jnp.float32)) for p in parts])
+
+
 # ---------------------------------------------------------------------------
 # Catch: ball falls from the top, 3-action paddle on the bottom row.
 # ---------------------------------------------------------------------------
 
-def _catch_reset(key: jax.Array) -> State:
-    kb, kp = jax.random.split(key)
-    return {
-        "ball_x": jax.random.randint(kb, (), 0, SIZE),
-        "ball_y": _i32(0),
-        "paddle_x": jax.random.randint(kp, (), 0, SIZE),
-        "t": _i32(0),
-    }
+def _make_catch(p: CatchParams) -> EnvSpec:
+    n, hw = p.size, p.paddle_width // 2
+    max_steps = p.max_steps or 2 * n
 
+    def reset(key: jax.Array) -> State:
+        kb, kp = jax.random.split(key)
+        return {
+            "ball_x": jax.random.randint(kb, (), 0, n),
+            "ball_y": _i32(0),
+            "paddle_x": jax.random.randint(kp, (), 0, n),
+            "t": _i32(0),
+        }
 
-def _catch_step(s: State, a: jax.Array, key: jax.Array):
-    dx = jnp.array([-1, 0, 1], jnp.int32)[a]
-    paddle = jnp.clip(s["paddle_x"] + dx, 0, SIZE - 1)
-    ball_y = s["ball_y"] + 1
-    done = ball_y >= SIZE - 1
-    caught = jnp.abs(s["ball_x"] - paddle) <= 1
-    reward = jnp.where(done, jnp.where(caught, 1.0, -1.0), 0.0)
-    ns = {"ball_x": s["ball_x"], "ball_y": ball_y, "paddle_x": paddle,
-          "t": s["t"] + 1}
-    return ns, reward.astype(jnp.float32), done
+    def step(s: State, a: jax.Array, key: jax.Array):
+        dx = jnp.array([-1, 0, 1], jnp.int32)[a]
+        paddle = jnp.clip(s["paddle_x"] + dx, 0, n - 1)
+        ball_y = s["ball_y"] + p.ball_speed
+        done = ball_y >= n - 1
+        caught = jnp.abs(s["ball_x"] - paddle) <= hw
+        reward = jnp.where(done, jnp.where(caught, 1.0, -1.0), 0.0)
+        ns = {"ball_x": s["ball_x"], "ball_y": jnp.minimum(ball_y, n - 1),
+              "paddle_x": paddle, "t": s["t"] + 1}
+        return ns, reward.astype(jnp.float32), done
 
+    def render(s: State) -> jax.Array:
+        g = jnp.zeros((n, n, 2), jnp.float32)
+        g = g.at[s["ball_y"], s["ball_x"], 0].set(1.0)
+        pad = (jnp.abs(jnp.arange(n) - s["paddle_x"]) <= hw)
+        g = g.at[n - 1, :, 1].set(pad.astype(jnp.float32))
+        return g
 
-def _catch_render(s: State) -> jax.Array:
-    g = jnp.zeros((SIZE, SIZE, 2), jnp.float32)
-    g = g.at[s["ball_y"], s["ball_x"], 0].set(1.0)
-    g = g.at[SIZE - 1, s["paddle_x"], 1].set(1.0)
-    return g
+    def observe(s: State) -> jax.Array:
+        return _f32(s["ball_x"], s["ball_y"], s["paddle_x"]) / (n - 1)
+
+    return EnvSpec("catch", 3, 2, max_steps, reset, step, render, size=n,
+                   observe=observe, obs_dim=3, params=p)
 
 
 # ---------------------------------------------------------------------------
-# Breakout: bouncing ball, paddle, 3 brick rows.
+# Breakout: bouncing ball, paddle, brick rows.
 # ---------------------------------------------------------------------------
 
-def _breakout_reset(key: jax.Array) -> State:
-    kx, kd = jax.random.split(key)
-    return {
-        "ball_x": jax.random.randint(kx, (), 0, SIZE),
-        "ball_y": _i32(3),
-        "dx": jax.random.choice(kd, jnp.array([-1, 1], jnp.int32)),
-        "dy": _i32(1),
-        "paddle_x": _i32(SIZE // 2),
-        "bricks": jnp.ones((3, SIZE), jnp.bool_),
-        "t": _i32(0),
-    }
+def _make_breakout(p: BreakoutParams) -> EnvSpec:
+    n, rows, hw = p.size, p.brick_rows, p.paddle_width // 2
+    max_steps = p.max_steps or 50 * n
 
+    def reset(key: jax.Array) -> State:
+        kx, kd = jax.random.split(key)
+        return {
+            "ball_x": jax.random.randint(kx, (), 0, n),
+            "ball_y": _i32(rows),
+            "dx": jax.random.choice(kd, jnp.array([-1, 1], jnp.int32)),
+            "dy": _i32(1),
+            "paddle_x": _i32(n // 2),
+            "bricks": jnp.ones((rows, n), jnp.bool_),
+            "t": _i32(0),
+        }
 
-def _breakout_step(s: State, a: jax.Array, key: jax.Array):
-    dxa = jnp.array([-1, 0, 1], jnp.int32)[a]
-    paddle = jnp.clip(s["paddle_x"] + dxa, 0, SIZE - 1)
-    # move ball; bounce off side walls
-    nx = s["ball_x"] + s["dx"]
-    dx = jnp.where((nx < 0) | (nx >= SIZE), -s["dx"], s["dx"])
-    nx = jnp.clip(nx, 0, SIZE - 1)
-    ny = s["ball_y"] + s["dy"]
-    dy = jnp.where(ny < 0, -s["dy"], s["dy"])
-    ny_c = jnp.clip(ny, 0, SIZE - 1)
-    # brick hit (rows 1..3)
-    row = ny_c - 1
-    in_bricks = (row >= 0) & (row < 3)
-    hit = in_bricks & s["bricks"][jnp.clip(row, 0, 2), nx]
-    bricks = s["bricks"].at[jnp.clip(row, 0, 2), nx].set(
-        jnp.where(hit, False, s["bricks"][jnp.clip(row, 0, 2), nx]))
-    dy = jnp.where(hit, -dy, dy)
-    reward = jnp.where(hit, 1.0, 0.0)
-    # paddle bounce on bottom row
-    at_bottom = ny_c >= SIZE - 1
-    on_paddle = jnp.abs(nx - paddle) <= 1
-    dy = jnp.where(at_bottom & on_paddle, -jnp.abs(dy), dy)
-    done = (at_bottom & ~on_paddle) | ~jnp.any(bricks) | (s["t"] >= 500)
-    ns = {"ball_x": nx, "ball_y": ny_c, "dx": dx, "dy": dy,
-          "paddle_x": paddle, "bricks": bricks, "t": s["t"] + 1}
-    return ns, reward.astype(jnp.float32), done
+    def step(s: State, a: jax.Array, key: jax.Array):
+        dxa = jnp.array([-1, 0, 1], jnp.int32)[a]
+        paddle = jnp.clip(s["paddle_x"] + dxa, 0, n - 1)
+        # move ball; bounce off side walls
+        nx = s["ball_x"] + s["dx"]
+        dx = jnp.where((nx < 0) | (nx >= n), -s["dx"], s["dx"])
+        nx = jnp.clip(nx, 0, n - 1)
+        ny = s["ball_y"] + s["dy"]
+        dy = jnp.where(ny < 0, -s["dy"], s["dy"])
+        ny_c = jnp.clip(ny, 0, n - 1)
+        # brick hit (rows 1..rows)
+        row = ny_c - 1
+        in_bricks = (row >= 0) & (row < rows)
+        rc = jnp.clip(row, 0, rows - 1)
+        hit = in_bricks & s["bricks"][rc, nx]
+        bricks = s["bricks"].at[rc, nx].set(
+            jnp.where(hit, False, s["bricks"][rc, nx]))
+        dy = jnp.where(hit, -dy, dy)
+        reward = jnp.where(hit, 1.0, 0.0)
+        # paddle bounce on bottom row
+        at_bottom = ny_c >= n - 1
+        on_paddle = jnp.abs(nx - paddle) <= hw
+        dy = jnp.where(at_bottom & on_paddle, -jnp.abs(dy), dy)
+        done = (at_bottom & ~on_paddle) | ~jnp.any(bricks) | (s["t"] >= max_steps)
+        ns = {"ball_x": nx, "ball_y": ny_c, "dx": dx, "dy": dy,
+              "paddle_x": paddle, "bricks": bricks, "t": s["t"] + 1}
+        return ns, reward.astype(jnp.float32), done
 
+    def render(s: State) -> jax.Array:
+        g = jnp.zeros((n, n, 3), jnp.float32)
+        g = g.at[s["ball_y"], s["ball_x"], 0].set(1.0)
+        pad = (jnp.abs(jnp.arange(n) - s["paddle_x"]) <= hw)
+        g = g.at[n - 1, :, 1].set(pad.astype(jnp.float32))
+        g = g.at[1:rows + 1, :, 2].set(s["bricks"].astype(jnp.float32))
+        return g
 
-def _breakout_render(s: State) -> jax.Array:
-    g = jnp.zeros((SIZE, SIZE, 3), jnp.float32)
-    g = g.at[s["ball_y"], s["ball_x"], 0].set(1.0)
-    g = g.at[SIZE - 1, s["paddle_x"], 1].set(1.0)
-    g = g.at[1:4, :, 2].set(s["bricks"].astype(jnp.float32))
-    return g
+    def observe(s: State) -> jax.Array:
+        return _f32(
+            s["ball_x"] / (n - 1), s["ball_y"] / (n - 1),
+            (s["dx"] + 1) / 2, (s["dy"] + 1) / 2,
+            s["paddle_x"] / (n - 1), s["bricks"])
+
+    return EnvSpec("breakout", 3, 3, max_steps, reset, step, render, size=n,
+                   observe=observe, obs_dim=5 + rows * n, params=p)
 
 
 # ---------------------------------------------------------------------------
 # Pong (squash): ball bounces off three walls; paddle guards the bottom.
 # ---------------------------------------------------------------------------
 
-def _pong_reset(key: jax.Array) -> State:
-    kx, kd = jax.random.split(key)
-    return {
-        "ball_x": jax.random.randint(kx, (), 1, SIZE - 1),
-        "ball_y": _i32(1),
-        "dx": jax.random.choice(kd, jnp.array([-1, 1], jnp.int32)),
-        "dy": _i32(1),
-        "paddle_x": _i32(SIZE // 2),
-        "t": _i32(0),
-    }
+def _make_pong(p: PongParams) -> EnvSpec:
+    n, hw = p.size, p.paddle_width // 2
+    max_steps = p.max_steps or 50 * n
 
+    def reset(key: jax.Array) -> State:
+        kx, kd = jax.random.split(key)
+        return {
+            "ball_x": jax.random.randint(kx, (), 1, n - 1),
+            "ball_y": _i32(1),
+            "dx": jax.random.choice(kd, jnp.array([-1, 1], jnp.int32)),
+            "dy": _i32(1),
+            "paddle_x": _i32(n // 2),
+            "t": _i32(0),
+        }
 
-def _pong_step(s: State, a: jax.Array, key: jax.Array):
-    dxa = jnp.array([-1, 0, 1], jnp.int32)[a]
-    paddle = jnp.clip(s["paddle_x"] + dxa, 0, SIZE - 1)
-    nx = s["ball_x"] + s["dx"]
-    dx = jnp.where((nx < 0) | (nx >= SIZE), -s["dx"], s["dx"])
-    nx = jnp.clip(nx, 0, SIZE - 1)
-    ny = s["ball_y"] + s["dy"]
-    dy = jnp.where(ny < 0, -s["dy"], s["dy"])
-    ny = jnp.clip(ny, 0, SIZE - 1)
-    at_bottom = ny >= SIZE - 1
-    on_paddle = jnp.abs(nx - paddle) <= 1
-    bounce = at_bottom & on_paddle
-    dy = jnp.where(bounce, -jnp.abs(dy), dy)
-    reward = jnp.where(bounce, 1.0, 0.0)
-    done = (at_bottom & ~on_paddle) | (s["t"] >= 500)
-    ns = {"ball_x": nx, "ball_y": ny, "dx": dx, "dy": dy,
-          "paddle_x": paddle, "t": s["t"] + 1}
-    return ns, reward.astype(jnp.float32), done
+    def step(s: State, a: jax.Array, key: jax.Array):
+        dxa = jnp.array([-1, 0, 1], jnp.int32)[a]
+        paddle = jnp.clip(s["paddle_x"] + dxa, 0, n - 1)
+        nx = s["ball_x"] + s["dx"]
+        dx = jnp.where((nx < 0) | (nx >= n), -s["dx"], s["dx"])
+        nx = jnp.clip(nx, 0, n - 1)
+        ny = s["ball_y"] + s["dy"]
+        dy = jnp.where(ny < 0, -s["dy"], s["dy"])
+        ny = jnp.clip(ny, 0, n - 1)
+        at_bottom = ny >= n - 1
+        on_paddle = jnp.abs(nx - paddle) <= hw
+        bounce = at_bottom & on_paddle
+        dy = jnp.where(bounce, -jnp.abs(dy), dy)
+        reward = jnp.where(bounce, 1.0, 0.0)
+        done = (at_bottom & ~on_paddle) | (s["t"] >= max_steps)
+        ns = {"ball_x": nx, "ball_y": ny, "dx": dx, "dy": dy,
+              "paddle_x": paddle, "t": s["t"] + 1}
+        return ns, reward.astype(jnp.float32), done
 
+    def render(s: State) -> jax.Array:
+        g = jnp.zeros((n, n, 2), jnp.float32)
+        g = g.at[s["ball_y"], s["ball_x"], 0].set(1.0)
+        pad = (jnp.abs(jnp.arange(n) - s["paddle_x"]) <= hw)
+        g = g.at[n - 1, :, 1].set(pad.astype(jnp.float32))
+        return g
 
-def _pong_render(s: State) -> jax.Array:
-    g = jnp.zeros((SIZE, SIZE, 2), jnp.float32)
-    g = g.at[s["ball_y"], s["ball_x"], 0].set(1.0)
-    g = g.at[SIZE - 1, s["paddle_x"], 1].set(1.0)
-    return g
+    def observe(s: State) -> jax.Array:
+        return _f32(
+            s["ball_x"] / (n - 1), s["ball_y"] / (n - 1),
+            (s["dx"] + 1) / 2, (s["dy"] + 1) / 2,
+            s["paddle_x"] / (n - 1))
+
+    return EnvSpec("pong", 3, 2, max_steps, reset, step, render, size=n,
+                   observe=observe, obs_dim=5, params=p)
 
 
 # ---------------------------------------------------------------------------
-# Seeker: navigate to the goal, avoid the random-walking hazard.
+# Seeker: navigate to the goal, avoid the random-walking hazards.
 # ---------------------------------------------------------------------------
-
-def _seeker_reset(key: jax.Array) -> State:
-    ka, kg, kh = jax.random.split(key, 3)
-    return {
-        "agent": jax.random.randint(ka, (2,), 0, SIZE),
-        "goal": jax.random.randint(kg, (2,), 0, SIZE),
-        "hazard": jax.random.randint(kh, (2,), 0, SIZE),
-        "t": _i32(0),
-    }
-
 
 _MOVES = jnp.array([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]], jnp.int32)
 
 
-def _seeker_step(s: State, a: jax.Array, key: jax.Array):
-    kh, kg = jax.random.split(key)
-    agent = jnp.clip(s["agent"] + _MOVES[a], 0, SIZE - 1)
-    hz_mv = _MOVES[jax.random.randint(kh, (), 0, 5)]
-    hazard = jnp.clip(s["hazard"] + hz_mv, 0, SIZE - 1)
-    reached = jnp.all(agent == s["goal"])
-    hit = jnp.all(agent == hazard)
-    reward = jnp.where(reached, 1.0, 0.0) - jnp.where(hit, 1.0, 0.0)
-    goal = jnp.where(reached, jax.random.randint(kg, (2,), 0, SIZE), s["goal"])
-    done = hit | (s["t"] >= 200)
-    ns = {"agent": agent, "goal": goal, "hazard": hazard, "t": s["t"] + 1}
-    return ns, reward.astype(jnp.float32), done
+def _make_seeker(p: SeekerParams) -> EnvSpec:
+    n, nh = p.size, p.n_hazards
+    max_steps = p.max_steps or 20 * n
+
+    def reset(key: jax.Array) -> State:
+        ka, kg, kh = jax.random.split(key, 3)
+        return {
+            "agent": jax.random.randint(ka, (2,), 0, n),
+            "goal": jax.random.randint(kg, (2,), 0, n),
+            "hazard": jax.random.randint(kh, (nh, 2), 0, n),
+            "t": _i32(0),
+        }
+
+    def step(s: State, a: jax.Array, key: jax.Array):
+        kh, kg = jax.random.split(key)
+        agent = jnp.clip(s["agent"] + _MOVES[a], 0, n - 1)
+        hz_mv = _MOVES[jax.random.randint(kh, (nh,), 0, 5)]
+        hazard = jnp.clip(s["hazard"] + hz_mv, 0, n - 1)
+        reached = jnp.all(agent == s["goal"])
+        hit = jnp.any(jnp.all(agent[None, :] == hazard, axis=1))
+        reward = jnp.where(reached, 1.0, 0.0) - jnp.where(hit, 1.0, 0.0)
+        goal = jnp.where(reached, jax.random.randint(kg, (2,), 0, n),
+                         s["goal"])
+        done = hit | (s["t"] >= max_steps)
+        ns = {"agent": agent, "goal": goal, "hazard": hazard, "t": s["t"] + 1}
+        return ns, reward.astype(jnp.float32), done
+
+    def render(s: State) -> jax.Array:
+        g = jnp.zeros((n, n, 3), jnp.float32)
+        g = g.at[s["agent"][0], s["agent"][1], 0].set(1.0)
+        g = g.at[s["goal"][0], s["goal"][1], 1].set(1.0)
+        g = g.at[s["hazard"][:, 0], s["hazard"][:, 1], 2].set(1.0)
+        return g
+
+    def observe(s: State) -> jax.Array:
+        return _f32(s["agent"], s["goal"], s["hazard"]) / (n - 1)
+
+    return EnvSpec("seeker", 5, 3, max_steps, reset, step, render, size=n,
+                   observe=observe, obs_dim=4 + 2 * nh, params=p)
 
 
-def _seeker_render(s: State) -> jax.Array:
-    g = jnp.zeros((SIZE, SIZE, 3), jnp.float32)
-    g = g.at[s["agent"][0], s["agent"][1], 0].set(1.0)
-    g = g.at[s["goal"][0], s["goal"][1], 1].set(1.0)
-    g = g.at[s["hazard"][0], s["hazard"][1], 2].set(1.0)
-    return g
+# ---------------------------------------------------------------------------
+# Freeway: cross the lanes of moving cars; +1 per crossing, -1 per hit.
+# ---------------------------------------------------------------------------
+
+def _make_freeway(p: FreewayParams) -> EnvSpec:
+    n, speed = p.size, p.car_speed
+    lanes = n - 2                        # rows 1..n-2 carry one car each
+    center = n // 2                      # the agent climbs a fixed column
+    dirs = jnp.where(jnp.arange(lanes) % 2 == 0, 1, -1).astype(jnp.int32)
+    max_steps = p.max_steps or 25 * n
+
+    def reset(key: jax.Array) -> State:
+        return {
+            "row": _i32(n - 1),
+            "cars": jax.random.randint(key, (lanes,), 0, n),
+            "t": _i32(0),
+        }
+
+    def step(s: State, a: jax.Array, key: jax.Array):
+        move = jnp.array([0, -1, 1], jnp.int32)[a]      # stay / up / down
+        row = jnp.clip(s["row"] + move, 0, n - 1)
+        cars = (s["cars"] + dirs * speed) % n
+        in_lane = (row >= 1) & (row <= n - 2)
+        lane = jnp.clip(row - 1, 0, lanes - 1)
+        hit = in_lane & (cars[lane] == center)
+        reached = row == 0
+        reward = jnp.where(reached, 1.0, jnp.where(hit, -1.0, 0.0))
+        row = jnp.where(reached | hit, n - 1, row)      # teleport home
+        done = s["t"] >= max_steps
+        ns = {"row": row, "cars": cars, "t": s["t"] + 1}
+        return ns, reward.astype(jnp.float32), done
+
+    def render(s: State) -> jax.Array:
+        g = jnp.zeros((n, n, 2), jnp.float32)
+        g = g.at[s["row"], center, 0].set(1.0)
+        g = g.at[1 + jnp.arange(lanes), s["cars"], 1].set(1.0)
+        return g
+
+    def observe(s: State) -> jax.Array:
+        return _f32(s["row"], s["cars"]) / (n - 1)
+
+    return EnvSpec("freeway", 3, 2, max_steps, reset, step, render, size=n,
+                   observe=observe, obs_dim=1 + lanes, params=p)
 
 
-ENVS: Dict[str, EnvSpec] = {
-    "catch": EnvSpec("catch", 3, 2, 20, _catch_reset, _catch_step, _catch_render),
-    "breakout": EnvSpec("breakout", 3, 3, 500, _breakout_reset, _breakout_step, _breakout_render),
-    "pong": EnvSpec("pong", 3, 2, 500, _pong_reset, _pong_step, _pong_render),
-    "seeker": EnvSpec("seeker", 5, 3, 200, _seeker_reset, _seeker_step, _seeker_render),
+# ---------------------------------------------------------------------------
+# Dodge: obstacles rain down; survive (+0.1/step) or collide (-1, done).
+# ---------------------------------------------------------------------------
+
+def _make_dodge(p: DodgeParams) -> EnvSpec:
+    n, prob = p.size, p.spawn_prob
+    max_steps = p.max_steps or 20 * n
+
+    def reset(key: jax.Array) -> State:
+        return {
+            "paddle_x": jax.random.randint(key, (), 0, n),
+            "grid": jnp.zeros((n, n), jnp.bool_),
+            "t": _i32(0),
+        }
+
+    def step(s: State, a: jax.Array, key: jax.Array):
+        dx = jnp.array([-1, 0, 1], jnp.int32)[a]
+        paddle = jnp.clip(s["paddle_x"] + dx, 0, n - 1)
+        new_row = jax.random.uniform(key, (n,)) < prob
+        grid = jnp.concatenate([new_row[None, :], s["grid"][:-1]], axis=0)
+        hit = grid[n - 1, paddle]
+        reward = jnp.where(hit, -1.0, 0.1)
+        done = hit | (s["t"] >= max_steps)
+        ns = {"paddle_x": paddle, "grid": grid, "t": s["t"] + 1}
+        return ns, reward.astype(jnp.float32), done
+
+    def render(s: State) -> jax.Array:
+        g = jnp.zeros((n, n, 2), jnp.float32)
+        g = g.at[n - 1, s["paddle_x"], 0].set(1.0)
+        g = g.at[:, :, 1].set(s["grid"].astype(jnp.float32))
+        return g
+
+    def observe(s: State) -> jax.Array:
+        return _f32(s["paddle_x"] / (n - 1), s["grid"])
+
+    return EnvSpec("dodge", 3, 2, max_steps, reset, step, render, size=n,
+                   observe=observe, obs_dim=1 + n * n, params=p)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+GAMES: Dict[str, Tuple[type, Callable[[EnvParams], EnvSpec]]] = {
+    "catch": (CatchParams, _make_catch),
+    "breakout": (BreakoutParams, _make_breakout),
+    "pong": (PongParams, _make_pong),
+    "seeker": (SeekerParams, _make_seeker),
+    "freeway": (FreewayParams, _make_freeway),
+    "dodge": (DodgeParams, _make_dodge),
 }
 
 
-def get_env(name: str) -> EnvSpec:
+def _coerce(field: dataclasses.Field, value: Any, game: str) -> Any:
+    ok_int = isinstance(value, int) and not isinstance(value, bool)
+    if field.type in ("int", int):
+        if not ok_int:
+            raise ValueError(
+                f"env {game!r}: param {field.name} expects an int, got "
+                f"{value!r}")
+        return value
+    if not (ok_int or isinstance(value, float)):
+        raise ValueError(
+            f"env {game!r}: param {field.name} expects a number, got "
+            f"{value!r}")
+    return float(value)
+
+
+def _require(cond: bool, game: str, msg: str, cls: type) -> None:
+    if not cond:
+        raise ValueError(
+            f"env {game!r}: {msg}; valid params: {cls.describe()}")
+
+
+def make_env(name: str, params: Optional[EnvParams] = None,
+             **overrides: Any) -> EnvSpec:
+    """Build an :class:`EnvSpec` for ``name`` with validated parameters.
+
+    Either pass a full ``params`` dataclass or keyword overrides of the
+    game's defaults (``make_env("catch", size=16)``). Unknown games,
+    unknown parameter names, and out-of-range values raise ``ValueError``
+    messages that list what *is* valid — mirroring the spec layer's
+    unknown-field rejection style.
+    """
+    if name not in GAMES:
+        raise ValueError(
+            f"unknown env {name!r}; available: {sorted(GAMES)}")
+    cls, build = GAMES[name]
+    if params is None:
+        fields = {f.name: f for f in dataclasses.fields(cls)}
+        for k in overrides:
+            if k not in fields:
+                raise ValueError(
+                    f"env {name!r} has no param {k!r}; valid params: "
+                    f"{cls.describe()}")
+        params = cls(**{k: _coerce(fields[k], v, name)
+                        for k, v in overrides.items()})
+    elif overrides:
+        raise ValueError("pass either params or keyword overrides, not both")
+    elif not isinstance(params, cls):
+        raise ValueError(
+            f"env {name!r} expects {cls.__name__}, got "
+            f"{type(params).__name__}")
+    params.validate(name)
+    n = params.size
+    if isinstance(params, (CatchParams, BreakoutParams, PongParams)):
+        _require(params.paddle_width % 2 == 1, name,
+                 f"paddle_width={params.paddle_width} must be odd", cls)
+        _require(params.paddle_width <= n, name,
+                 f"paddle_width={params.paddle_width} must fit the grid "
+                 f"(size={n})", cls)
+    if isinstance(params, CatchParams):
+        _require(params.ball_speed <= n - 1, name,
+                 f"ball_speed={params.ball_speed} must be < size", cls)
+    if isinstance(params, BreakoutParams):
+        _require(params.brick_rows <= n - 3, name,
+                 f"brick_rows={params.brick_rows} must leave room for the "
+                 f"ball and paddle (<= size-3 = {n - 3})", cls)
+    if isinstance(params, SeekerParams):
+        _require(params.n_hazards <= n * n // 4, name,
+                 f"n_hazards={params.n_hazards} must be <= size*size/4", cls)
+    return build(params)
+
+
+ENVS: Dict[str, EnvSpec] = {name: make_env(name) for name in GAMES}
+
+
+def get_env(name: str, **overrides: Any) -> EnvSpec:
+    """Default-parameter spec from the registry; overrides build fresh."""
+    if overrides:
+        return make_env(name, **overrides)
+    if name not in ENVS:
+        raise ValueError(
+            f"unknown env {name!r}; available: {sorted(ENVS)}")
     return ENVS[name]
 
 
 def step_autoreset(spec: EnvSpec, state: State, action: jax.Array,
                    key: jax.Array):
     """Step; on done, the next state is a fresh reset (standard vector-env
-    semantics: the returned reward/done describe the finished episode)."""
+    semantics: the returned reward/done describe the finished episode).
+
+    The incoming key is split ONCE into (step, reset) halves so the
+    randomness consumed by ``spec.step`` can never alias the randomness
+    that seeds the replacement episode."""
     kstep, kreset = jax.random.split(key)
     ns, reward, done = spec.step(state, action, kstep)
     fresh = spec.reset(kreset)

@@ -1,19 +1,58 @@
 """Observation preprocessing: the paper's CPU-side pipeline.
 
 Mnih et al. preprocess 210x160 RGB Atari frames to 84x84 grayscale and
-stack 4. Our envs emit (10, 10, C) grids; ``to_frame84`` collapses
+stack 4. Our envs emit (S, S, C) grids; ``to_frame84`` collapses
 channels to a grayscale intensity and nearest-neighbour-upscales onto an
 84x84 uint8 canvas, reproducing the exact tensor the Nature CNN consumes
 (and the 1-byte/pixel host->device transfer the paper's bus analysis
-assumes). ``to_frame10`` is the compact variant used by fast tests.
+assumes). ``to_frame10`` is the compact native-size variant used by fast
+tests.
+
+Since PR 6 the samplers are observation-agnostic: an :class:`ObsPipeline`
+names the per-step observation — ``pixels`` (rendered uint8 frames, the
+paper's pipeline) or ``vector`` (the env's ``observe`` state vector, the
+deep_q_rl machine-state lineage) — and every stack/step helper works on
+either. Core entry points accept a plain int (pixel frame size) for
+back-compat or an ``ObsPipeline``.
 """
 
 from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.envs.games import EnvSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsPipeline:
+    """What one observation frame is: its mode, per-frame shape, dtype.
+
+    ``shape`` excludes the leading batch (W) and trailing stack (K)
+    axes: pixels -> (S, S) uint8, vector -> (obs_dim,) float32."""
+    mode: str                      # "pixels" | "vector"
+    shape: Tuple[int, ...]
+    dtype: Any
+
+
+def pixel_obs(frame_size: int) -> ObsPipeline:
+    return ObsPipeline("pixels", (frame_size, frame_size), jnp.uint8)
+
+
+def vector_obs(spec: EnvSpec) -> ObsPipeline:
+    if spec.observe is None:
+        raise ValueError(f"env {spec.name!r} has no observe(); "
+                         "vector observations unavailable")
+    return ObsPipeline("vector", (spec.obs_dim,), jnp.float32)
+
+
+def as_obs(obs: Union[int, ObsPipeline]) -> ObsPipeline:
+    """Normalize the core's ``obs`` argument: a bare int is the legacy
+    pixel frame size; an ObsPipeline passes through."""
+    return obs if isinstance(obs, ObsPipeline) else pixel_obs(int(obs))
 
 
 def grid_to_gray(grid: jax.Array) -> jax.Array:
@@ -40,17 +79,36 @@ def init_frame_stack(batch: int, size: int, stack: int) -> jax.Array:
     return jnp.zeros((batch, size, size, stack), jnp.uint8)
 
 
+def init_obs_stack(batch: int, pipe: ObsPipeline, stack: int) -> jax.Array:
+    """Zero observation stack: (B,) + pipe.shape + (K,) in pipe.dtype."""
+    return jnp.zeros((batch,) + pipe.shape + (stack,), pipe.dtype)
+
+
 def push_frame(stack: jax.Array, frame: jax.Array) -> jax.Array:
-    """stack: (B, S, S, K); frame: (B, S, S). Newest frame last."""
+    """stack: (B, *obs, K); frame: (B, *obs). Newest frame last. Works
+    for pixel (B, S, S, K) and vector (B, D, K) stacks alike."""
     return jnp.concatenate([stack[..., 1:], frame[..., None]], axis=-1)
 
 
 def reset_stack_where(stack: jax.Array, done: jax.Array) -> jax.Array:
     """Zero the history of streams whose episode just ended."""
-    return jnp.where(done[:, None, None, None], jnp.zeros_like(stack), stack)
+    d = done.reshape((-1,) + (1,) * (stack.ndim - 1))
+    return jnp.where(d, jnp.zeros_like(stack), stack)
 
 
 def render_batch(spec: EnvSpec, states, size: int = 84) -> jax.Array:
     """Vectorized render of W env states -> (W, size, size) uint8."""
     conv = to_frame84 if size == 84 else to_frame10
     return jax.vmap(lambda s: conv(spec.render(s)))(states)
+
+
+def obs_batch(pipe: ObsPipeline, spec: EnvSpec, states) -> jax.Array:
+    """One observation per env state: (W,) + pipe.shape in pipe.dtype."""
+    if pipe.mode == "vector":
+        return jax.vmap(spec.observe)(states)
+    if pipe.shape[0] == 84 and spec.size != 10:
+        raise ValueError(
+            f"84x84 frames assume a 10x10 grid (8x upscale + border); env "
+            f"{spec.name!r} has size={spec.size} — use frame_size="
+            f"{spec.size} (native) instead")
+    return render_batch(spec, states, pipe.shape[0])

@@ -143,17 +143,20 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
 
 
 def dqn_variant_spec(variant_name: str, kernel_backend: str,
-                     mode: str = "concurrent"):
+                     mode: str = "concurrent", env: str = "catch",
+                     obs_mode: str = "pixels"):
     """The dryrun-sized ExperimentSpec for one variant preset: the
-    ``tiny`` network on catch, a 32-step cycle — seconds to compile.
-    Shared with tests so the dryrun grid and the test harness cannot
-    drift."""
+    ``tiny`` network (or its ``mlp_tiny`` vector-mode analogue) on
+    catch, a 32-step cycle — seconds to compile. Shared with tests so
+    the dryrun grid and the test harness cannot drift."""
     from repro.api import AlgoSpec, ExperimentSpec, ScheduleSpec
     from repro.configs.dqn_nature import get_variant
 
     return ExperimentSpec(
-        env="catch", mode=mode, variant=get_variant(variant_name),
-        envs=4, frame_size=10, net="tiny",
+        env=env, mode=mode, variant=get_variant(variant_name),
+        obs_mode=obs_mode,
+        envs=4, frame_size=10,
+        net="mlp_tiny" if obs_mode == "vector" else "tiny",
         schedule=ScheduleSpec(cycles=1, cycle_steps=32, prepopulate=64,
                               eval_every=1, eval_episodes=8),
         algo=AlgoSpec(minibatch_size=8, replay_capacity=512,
@@ -162,7 +165,9 @@ def dqn_variant_spec(variant_name: str, kernel_backend: str,
                         kernel_backend=kernel_backend))
 
 
-def lower_dqn_variant(variant_name: str, kernel_backend: str) -> Dict[str, Any]:
+def lower_dqn_variant(variant_name: str, kernel_backend: str,
+                      env: str = "catch",
+                      obs_mode: str = "pixels") -> Dict[str, Any]:
     """Lower + compile one off-policy DQN variant's jitted C-cycle (the
     concurrent super-step, including the PER segment-tree path) and
     extract the same roofline terms as the LLM shapes. Single-device:
@@ -172,7 +177,8 @@ def lower_dqn_variant(variant_name: str, kernel_backend: str) -> Dict[str, Any]:
     what the launcher runs."""
     from repro.api import build_trainer
 
-    trainer = build_trainer(dqn_variant_spec(variant_name, kernel_backend))
+    trainer = build_trainer(dqn_variant_spec(variant_name, kernel_backend,
+                                             env=env, obs_mode=obs_mode))
     carry = trainer.init_carry()
 
     rec: Dict[str, Any] = {"arch": "dqn", "shape": f"variant_{variant_name}",
@@ -226,6 +232,13 @@ def main():
     ap.add_argument("--kernel-backend", default="auto",
                     choices=["auto", "pallas", "interpret", "ref",
                              "mosaic", "triton"])
+    ap.add_argument("--env", default="catch",
+                    help="(--arch dqn) env registry name; unknown names "
+                         "fail listing the available games")
+    ap.add_argument("--obs-mode", default="pixels",
+                    choices=["pixels", "vector"],
+                    help="(--arch dqn) observation mode for the variant "
+                         "grid")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
 
@@ -233,6 +246,12 @@ def main():
     # the LLM (arch x shape x mesh) grid; --variant narrows to one preset.
     if args.arch == "dqn":
         from repro.configs.dqn_nature import VARIANTS, get_variant
+        from repro.envs import make_env
+        try:
+            make_env(args.env)       # fail fast, listing available games
+        except ValueError as e:
+            print(f"invalid --env: {e}", flush=True)
+            return 2
         if args.variant == "baseline":        # the LLM-path default tag
             names = sorted(VARIANTS)
         else:
@@ -249,7 +268,9 @@ def main():
         for name in names:
             print(f"=== dqn x {name}", flush=True)
             try:
-                rec = lower_dqn_variant(name, args.kernel_backend)
+                rec = lower_dqn_variant(name, args.kernel_backend,
+                                        env=args.env,
+                                        obs_mode=args.obs_mode)
                 rec["variant"] = name
                 print(f"    lower {rec['lower_s']}s compile "
                       f"{rec['compile_s']}s | {rec['flops_per_device']:.3e} "

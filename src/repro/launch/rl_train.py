@@ -82,6 +82,16 @@ def parse_args(argv=None):
     ap.add_argument("--cycles", type=int, default=None)
     ap.add_argument("--cycle-steps", type=int, default=None)
     ap.add_argument("--envs", type=int, default=None)
+    ap.add_argument("--env-param", action="append", default=None,
+                    metavar="KEY=VALUE",
+                    help="static EnvParams override, repeatable "
+                         "(e.g. --env-param size=16 --env-param "
+                         "paddle_width=5); invalid names/values fail "
+                         "listing the game's valid ranges")
+    ap.add_argument("--obs-mode", default=None,
+                    choices=["pixels", "vector"],
+                    help="what one observation is: rendered uint8 "
+                         "frames or the env's float32 state vector")
     ap.add_argument("--frame-size", type=int, default=None, choices=[10, 84])
     ap.add_argument("--optimizer", default=None,
                     choices=["adamw", "rmsprop"],
@@ -123,6 +133,23 @@ def parse_args(argv=None):
     return ap.parse_args(argv)
 
 
+def _parse_env_params(pairs):
+    """--env-param KEY=VALUE list -> dict (numbers parsed as JSON)."""
+    if not pairs:
+        return None
+    out = {}
+    for p in pairs:
+        if "=" not in p:
+            raise ValueError(
+                f"--env-param expects KEY=VALUE, got {p!r}")
+        k, v = p.split("=", 1)
+        try:
+            out[k] = json.loads(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
 def resolve_spec(args) -> ExperimentSpec:
     """(spec file or defaults) + flag overrides -> one ExperimentSpec."""
     if args.spec:
@@ -139,6 +166,8 @@ def resolve_spec(args) -> ExperimentSpec:
 
     top = {k: v for k, v in {
         "mode": args.mode, "env": args.env, "envs": args.envs,
+        "env_params": _parse_env_params(args.env_param),
+        "obs_mode": args.obs_mode,
         "frame_size": args.frame_size, "seed": args.seed,
         "seeds": args.seeds,
         "variant": get_variant(args.variant) if args.variant else None,
@@ -169,11 +198,21 @@ def resolve_spec(args) -> ExperimentSpec:
 
 def main(argv=None):
     args = parse_args(argv)
-    spec = resolve_spec(args)
+    try:
+        spec = resolve_spec(args)
+    except ValueError as e:
+        print(f"invalid arguments: {e}", flush=True)
+        return 2
     if args.print_spec:
         print(spec.to_json(), end="")
         return 0
-    spec.validate()
+    try:
+        # unknown envs / bad EnvParams / net-obs mismatches fail here
+        # with the valid games and param ranges listed (repro.api.spec)
+        spec.validate()
+    except ValueError as e:
+        print(f"invalid spec: {e}", flush=True)
+        return 2
 
     trainer = build_trainer(spec)
     sched = spec.schedule

@@ -117,6 +117,52 @@ def test_validate_rejects_bad_specs():
         ExperimentSpec(frame_size=64).validate()
 
 
+def test_roundtrip_env_params_and_obs_mode():
+    """The PR-6 fields survive canonical JSON byte-for-byte."""
+    spec = _tiny_spec(env="seeker", env_params={"size": 12, "n_hazards": 2},
+                      obs_mode="vector", net="mlp_tiny")
+    spec.validate()
+    text = spec.to_json()
+    assert '"n_hazards": 2' in text and '"obs_mode": "vector"' in text
+    back = ExperimentSpec.from_json(text)
+    assert back == spec and back.to_json() == text
+
+
+def test_validate_env_params_and_obs_mode():
+    # unknown env lists what IS available
+    with pytest.raises(ValueError, match="available") as ei:
+        ExperimentSpec(env="ale_pong").validate()
+    assert "catch" in str(ei.value)
+    # out-of-range / invalid EnvParams surface the valid ranges
+    with pytest.raises(ValueError, match="valid params"):
+        _tiny_spec(env_params={"paddle_width": 2}).validate()
+    with pytest.raises(ValueError, match="valid params"):
+        _tiny_spec(env_params={"size": 3}).validate()
+    with pytest.raises(ValueError, match="obs_mode"):
+        _tiny_spec(obs_mode="audio").validate()
+    # obs-mode x net-preset cross checks
+    with pytest.raises(ValueError, match="conv preset"):
+        _tiny_spec(obs_mode="vector").validate()          # net="tiny"
+    with pytest.raises(ValueError, match="obs_mode"):
+        _tiny_spec(net="mlp").validate()                  # pixels + mlp
+    # native frame sizes: an env with size != 10 cannot upscale to 84
+    with pytest.raises(ValueError, match="frame_size"):
+        _tiny_spec(env_params={"size": 12}, frame_size=84).validate()
+    _tiny_spec(env_params={"size": 12}, frame_size=12,
+               net="small").validate()                    # native is fine
+
+
+@pytest.mark.parametrize("preset", sorted(VARIANTS))
+def test_build_trainer_both_obs_modes(preset):
+    """Every variant preset constructs a trainer under both observation
+    modes (compile deferred; this checks wiring, not learning)."""
+    for obs_mode, net in (("pixels", "tiny"), ("vector", "mlp_tiny")):
+        spec = _tiny_spec(variant=preset, net=net, obs_mode=obs_mode)
+        spec.validate()
+        trainer = build_trainer(spec)
+        assert trainer.replicas == 1
+
+
 # ---------------------------------------------------------------------------
 # 2. the Trainer protocol over every mode
 # ---------------------------------------------------------------------------
@@ -237,10 +283,10 @@ def test_population_spec_bitwise_equals_legacy_wiring():
         dcfg, 10)
     carry_old = jax.jit(lambda s: population_init(init_one, s))(seeds)
     cycle_old = jax.jit(make_population_cycle(
-        spec_env, qf, opt, dcfg, frame_size=10, kernel_backend="auto",
+        spec_env, qf, opt, dcfg, obs=10, kernel_backend="auto",
         mesh=replica_mesh(seeds_n)))
     ev_old = jax.jit(lambda p, k: population_evaluate(
-        spec_env, qf, p, k, dcfg, n_episodes=8, frame_size=10,
+        spec_env, qf, p, k, dcfg, n_episodes=8, obs=10,
         max_steps=spec_env.max_steps + 2))
 
     # --- the declarative path ------------------------------------------

@@ -80,7 +80,7 @@ def test_cycle_matches_sequential_oracle():
     spec, ncfg, dcfg, qf, opt, params, replay, sampler = _setup()
     carry0 = TrainerCarry(params, opt.init(params), replay, sampler,
                           jnp.int32(0))
-    cycle = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg, frame_size=FS))
+    cycle = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg, obs=FS))
     got, _ = cycle(carry0)
     want = _oracle_cycle(spec, qf, opt, dcfg, carry0)
     for g, w in zip(jax.tree_util.tree_leaves(got.params),
@@ -103,7 +103,7 @@ def test_actions_independent_of_learner():
         carry = TrainerCarry(params, opt.init(params), replay, sampler,
                              jnp.int32(0))
         cycle = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg,
-                                              frame_size=FS))
+                                              obs=FS))
         new, _ = cycle(carry)
         if lr == 0.0:
             ref_replay = new.replay
@@ -119,7 +119,7 @@ def test_target_refresh_at_boundary():
     spec, ncfg, dcfg, qf, opt, params, replay, sampler = _setup()
     carry = TrainerCarry(params, opt.init(params), replay, sampler,
                          jnp.int32(0))
-    cycle = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg, frame_size=FS))
+    cycle = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg, obs=FS))
     c1, _ = cycle(carry)
     # params changed during the cycle...
     diffs = [float(jnp.max(jnp.abs(a - b)))

@@ -1,20 +1,59 @@
-"""Environment invariants (hypothesis): bounded rewards, episode
-termination, render contents, autoreset semantics, preprocessing."""
+"""Environment invariants: bounded rewards, episode termination, render
+and observe contracts, autoreset semantics, preprocessing.
+
+Property tests fuzz with hypothesis when it is installed; otherwise the
+same ``@given`` strategies expand into a small deterministic parametrized
+sweep (every sampled_from value covered once, integer ranges probed at
+lo/mid/hi) so CI containers without hypothesis still run the invariants."""
+
+import functools
+import itertools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis", reason="property tests need hypothesis (pip install "
-    "hypothesis); deterministic coverage still runs elsewhere")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    class _Examples:
+        """A strategy degraded to a finite example list."""
+        def __init__(self, vals):
+            self.vals = list(vals)
 
-from repro.envs import ENVS, get_env
+    class st:                                    # noqa: N801
+        @staticmethod
+        def sampled_from(xs):
+            return _Examples(xs)
+
+        @staticmethod
+        def integers(lo, hi):
+            return _Examples(sorted({lo, (lo + hi) // 2, hi}))
+
+    def settings(**kw):
+        return lambda f: f
+
+    def given(**strats):
+        keys = sorted(strats)
+        n = max(len(strats[k].vals) for k in keys)
+        combos = [tuple(strats[k].vals[i % len(strats[k].vals)]
+                        for k in keys) for i in range(n)]
+        def deco(f):
+            return pytest.mark.parametrize(",".join(keys), combos)(f)
+        return deco
+
+from repro.envs import ENVS, GAMES, get_env, make_env
 from repro.envs.games import step_autoreset
 from repro.envs.preprocess import push_frame, to_frame84, to_frame10
 from repro.envs.host_envs import HostCatch
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
 @settings(max_examples=10, deadline=None)
@@ -22,16 +61,20 @@ from repro.envs.host_envs import HostCatch
        n_steps=st.integers(1, 30))
 def test_step_invariants(name, seed, n_steps):
     spec = get_env(name)
+    lo, hi = spec.reward_range
     key = jax.random.PRNGKey(seed)
     state = spec.reset(key)
     for t in range(n_steps):
         key, ka, ks = jax.random.split(key, 3)
         a = jax.random.randint(ka, (), 0, spec.n_actions)
         state, r, done = step_autoreset(spec, state, a, ks)
-        assert -1.0 <= float(r) <= 1.0
+        assert lo <= float(r) <= hi
         grid = spec.render(state)
         assert grid.shape == (spec.size, spec.size, spec.channels)
         assert 0.0 <= float(grid.min()) and float(grid.max()) <= 1.0
+        vec = spec.observe(state)
+        assert vec.shape == (spec.obs_dim,) and vec.dtype == jnp.float32
+        assert 0.0 <= float(vec.min()) and float(vec.max()) <= 1.0
 
 
 def test_catch_terminates_in_nine_steps():
@@ -73,6 +116,113 @@ def test_push_frame_rolls():
     for v in (1, 2, 3, 4):
         stack = push_frame(stack, jnp.full((1, 4, 4), v, jnp.uint8))
     assert stack[0, 0, 0].tolist() == [2, 3, 4]
+
+
+# ---------------------------------------------------------------------------
+# PR-6: EnvParams registry, observation contracts, autoreset freshness
+# ---------------------------------------------------------------------------
+
+def test_registry_games_and_specs_agree():
+    """Every registered game ships a default spec with params attached,
+    a vector observe(), and a self-consistent name."""
+    assert sorted(ENVS) == sorted(GAMES)
+    for name, spec in ENVS.items():
+        assert spec.name == name
+        assert spec.params is not None
+        assert spec.observe is not None and spec.obs_dim > 0
+        assert spec.reward_range[0] < spec.reward_range[1]
+
+
+def test_make_env_unknown_game_lists_available():
+    with pytest.raises(ValueError) as ei:
+        make_env("ale_pong")
+    for name in ENVS:
+        assert name in str(ei.value)
+
+
+def test_make_env_unknown_param_lists_valid_ranges():
+    with pytest.raises(ValueError, match="valid params") as ei:
+        make_env("catch", paddle_size=5)          # no such param
+    assert "paddle_width" in str(ei.value)        # the describe() listing
+
+
+def test_make_env_out_of_range_and_cross_field_rejected():
+    with pytest.raises(ValueError, match="size"):
+        make_env("catch", size=3)                 # below RANGES floor
+    with pytest.raises(ValueError, match="odd"):
+        make_env("catch", paddle_width=2)         # centered paddle only
+    with pytest.raises(ValueError, match="brick_rows"):
+        make_env("breakout", size=8, brick_rows=7)
+    with pytest.raises(ValueError, match="n_hazards"):
+        make_env("seeker", size=4, n_hazards=16)
+
+
+def test_env_params_change_geometry():
+    spec = make_env("catch", size=16, paddle_width=5)
+    state = spec.reset(jax.random.PRNGKey(0))
+    assert spec.render(state).shape == (16, 16, 2)
+    assert spec.observe(state).shape == (spec.obs_dim,)
+    assert spec.max_steps == 32                   # 2n default scales
+
+
+@settings(max_examples=12, deadline=None)
+@given(name=st.sampled_from(sorted(ENVS)), seed=st.integers(0, 100))
+def test_autoreset_lands_on_fresh_state(name, seed):
+    """When done fires, the returned state is bitwise the reset drawn
+    from the key's reset half — in particular t == 0 (small grids so
+    every game terminates quickly)."""
+    spec = make_env(name, size=6, max_steps=8)
+    key = jax.random.PRNGKey(seed)
+    state = spec.reset(key)
+    for _ in range(20):
+        key, ka, ks = jax.random.split(key, 3)
+        a = jax.random.randint(ka, (), 0, spec.n_actions)
+        state, r, done = step_autoreset(spec, state, a, ks)
+        if bool(done):
+            _, kreset = jax.random.split(ks)
+            _tree_equal(state, spec.reset(kreset))
+            assert int(state["t"]) == 0
+            return
+    raise AssertionError(f"{name} (size=6, max_steps=8) never terminated")
+
+
+@settings(max_examples=8, deadline=None)
+@given(name=st.sampled_from(sorted(ENVS)), size=st.integers(6, 12),
+       seed=st.integers(0, 50))
+def test_vmap_matches_scalar_bitwise(name, size, seed):
+    """The W sampler axis is pure vmap: batched autoreset steps equal
+    the scalar calls bit-for-bit, under randomized EnvParams sizes."""
+    spec = make_env(name, size=size)
+    W = 5
+    kr = jax.random.split(jax.random.PRNGKey(seed), W)
+    states = jax.vmap(spec.reset)(kr)
+    ks = jax.random.split(jax.random.PRNGKey(seed + 1), W)
+    actions = jax.random.randint(jax.random.PRNGKey(seed + 2), (W,), 0,
+                                 spec.n_actions)
+    vs, vr, vd = jax.vmap(lambda s, a, k: step_autoreset(spec, s, a, k))(
+        states, actions, ks)
+    for i in range(W):
+        s_i = jax.tree.map(lambda x: x[i], states)
+        ss, sr, sd = step_autoreset(spec, s_i, actions[i], ks[i])
+        _tree_equal(jax.tree.map(lambda x: x[i], vs), ss)
+        np.testing.assert_array_equal(np.asarray(vr[i]), np.asarray(sr))
+        np.testing.assert_array_equal(np.asarray(vd[i]), np.asarray(sd))
+
+
+def test_mega_w_batch_every_game():
+    """W=512 instances per game step in one vmap (the mega-env axis)."""
+    W = 512
+    for name, spec in sorted(ENVS.items()):
+        keys = jax.random.split(jax.random.PRNGKey(7), W)
+        states = jax.vmap(spec.reset)(keys)
+        actions = jax.random.randint(jax.random.PRNGKey(8), (W,), 0,
+                                     spec.n_actions)
+        ns, r, d = jax.vmap(lambda s, a, k: step_autoreset(spec, s, a, k))(
+            states, actions, jax.random.split(jax.random.PRNGKey(9), W))
+        assert r.shape == (W,) and d.shape == (W,)
+        assert np.isfinite(np.asarray(r)).all()
+        obs = jax.vmap(spec.observe)(ns)
+        assert obs.shape == (W, spec.obs_dim) and obs.dtype == jnp.float32
 
 
 def test_host_catch_mirrors_jax_dynamics():

@@ -55,7 +55,7 @@ def _fixture(name, C=16, W=4):
     opt = adamw(1e-3, weight_decay=0.0)
     init_one = make_replica_init(
         spec, lambda k: q_init(ncfg, spec.n_actions, k), qf, opt, dcfg, FS)
-    cycle = jax.jit(make_population_cycle(spec, qf, opt, dcfg, frame_size=FS,
+    cycle = jax.jit(make_population_cycle(spec, qf, opt, dcfg, obs=FS,
                                           q_logits=qlog))
     return spec, dcfg, qf, init_one, cycle
 
@@ -171,13 +171,13 @@ def test_evaluate_counts_only_finished_episodes():
                      n_envs=4, frame_stack=2, eval_eps=0.05)
     qf = lambda p, o: jnp.zeros((o.shape[0], spec.n_actions))  # noqa: E731
     got = evaluate(spec, qf, None, jax.random.PRNGKey(0), dcfg,
-                   n_episodes=16, frame_size=FS, max_steps=5)
+                   n_episodes=16, obs=FS, max_steps=5)
     # every finished episode returned exactly 2.0; truncated streams
     # (thr=10) accumulated 5.0 and are excluded
     assert float(got) == 2.0
     # nothing finishes within 1 step -> partial-return fallback (1.0/step)
     got_none = evaluate(spec, qf, None, jax.random.PRNGKey(0), dcfg,
-                        n_episodes=16, frame_size=FS, max_steps=1)
+                        n_episodes=16, obs=FS, max_steps=1)
     assert float(got_none) == 1.0
 
 
@@ -194,7 +194,7 @@ def test_population_evaluate_shapes_and_keys():
     np.testing.assert_array_equal(np.asarray(ks),
                                   np.asarray(eval_keys(seeds, 0)))
     ev = population_evaluate(spec, qf, pop.params, ks, dcfg,
-                             n_episodes=8, frame_size=FS)
+                             n_episodes=8, obs=FS)
     assert ev.shape == (2,)
 
 
@@ -246,9 +246,9 @@ init_one = make_replica_init(spec, lambda k: q_init(ncfg, spec.n_actions, k),
 pop = population_init(init_one, seed_array(0, 4))
 mesh = replica_mesh(4)
 assert mesh is not None
-sharded = jax.jit(make_population_cycle(spec, qf, opt, dcfg, frame_size=FS,
+sharded = jax.jit(make_population_cycle(spec, qf, opt, dcfg, obs=FS,
                                         mesh=mesh))
-plain = jax.jit(make_population_cycle(spec, qf, opt, dcfg, frame_size=FS))
+plain = jax.jit(make_population_cycle(spec, qf, opt, dcfg, obs=FS))
 a, _ = sharded(pop)
 b, _ = plain(pop)
 for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):

@@ -41,9 +41,9 @@ def test_concurrent_dqn_learns_catch():
     replay, sampler = jax.jit(
         lambda r, s: prepopulate(spec, qf, dcfg, r, s, dcfg.prepopulate, FS)
     )(replay, sampler)
-    cycle = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg, frame_size=FS))
+    cycle = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg, obs=FS))
     ev = jax.jit(lambda p, k: evaluate(spec, qf, p, k, dcfg, n_episodes=64,
-                                       frame_size=FS, max_steps=15))
+                                       obs=FS, max_steps=15))
     carry = TrainerCarry(params, opt.init(params), replay, sampler,
                          jnp.int32(0))
     random_return = float(ev(carry.params, key))
@@ -63,7 +63,7 @@ def test_evaluation_is_deterministic():
     qf = lambda p, o: q_forward(p, o, ncfg)
     params = q_init(ncfg, spec.n_actions, jax.random.PRNGKey(0))
     ev = jax.jit(lambda p, k: evaluate(spec, qf, p, k, dcfg, n_episodes=8,
-                                       frame_size=FS, max_steps=12))
+                                       obs=FS, max_steps=12))
     a = float(ev(params, jax.random.PRNGKey(5)))
     b = float(ev(params, jax.random.PRNGKey(5)))
     assert a == b

@@ -17,6 +17,7 @@ from repro.config import DQNConfig, VariantConfig
 from repro.configs.dqn_nature import (VARIANTS, NatureCNNConfig,
                                       cnn_config_for, get_variant)
 from repro.envs import get_env
+from repro.envs.preprocess import vector_obs
 from repro.models.nature_cnn import q_forward, q_init, q_logits, q_param_spec
 from repro.optim import adamw
 from repro.core.dqn import q_loss_variant
@@ -28,11 +29,21 @@ from repro.core.concurrent import (TrainerCarry, make_concurrent_cycle,
 FS = 10
 
 
-def _setup(variant: VariantConfig, C=16, W=4):
+def _setup(variant: VariantConfig, C=16, W=4, obs_mode="pixels"):
     spec = get_env("catch")
-    ncfg = cnn_config_for(variant, NatureCNNConfig(
-        frame_size=FS, frame_stack=2, convs=((8, 3, 1),), hidden=16,
-        n_actions=spec.n_actions))
+    if obs_mode == "vector":
+        obs = vector_obs(spec)            # (obs_dim,) float32 pipeline
+        base = NatureCNNConfig(frame_size=FS, frame_stack=2, convs=(),
+                               hidden=16, n_actions=spec.n_actions,
+                               vector_dim=spec.obs_dim)
+        replay_shape, replay_dtype = (spec.obs_dim, 2), jnp.float32
+    else:
+        obs = FS                          # legacy pixel frame size
+        base = NatureCNNConfig(frame_size=FS, frame_stack=2,
+                               convs=((8, 3, 1),), hidden=16,
+                               n_actions=spec.n_actions)
+        replay_shape, replay_dtype = (FS, FS, 2), jnp.uint8
+    ncfg = cnn_config_for(variant, base)
     dcfg = DQNConfig(minibatch_size=8, replay_capacity=128,
                      target_update_period=C, train_period=4,
                      prepopulate=32, n_envs=W, frame_stack=2,
@@ -43,14 +54,15 @@ def _setup(variant: VariantConfig, C=16, W=4):
     qlog = ((lambda p, o, k=None: q_logits(p, o, ncfg, noise_key=k))
             if variant.distributional else None)
     opt = adamw(1e-3, weight_decay=0.0)
-    replay = replay_init(dcfg.replay_capacity, (FS, FS, 2),
+    replay = replay_init(dcfg.replay_capacity, replay_shape,
+                         obs_dtype=replay_dtype,
                          prioritized=variant.prioritized)
-    sampler = sampler_init(spec, dcfg, key, FS)
+    sampler = sampler_init(spec, dcfg, key, obs)
     replay, sampler = prepopulate(spec, qf, dcfg, replay, sampler,
-                                  dcfg.prepopulate, FS)
+                                  dcfg.prepopulate, obs)
     carry = TrainerCarry(params, opt.init(params), replay, sampler,
                          jnp.int32(0))
-    return spec, dcfg, qf, qlog, opt, carry
+    return spec, dcfg, qf, qlog, opt, carry, obs
 
 
 def _assert_trees_equal(a, b):
@@ -73,15 +85,15 @@ def test_cycle_bitwise_deterministic(name):
     """Two executions of the jitted cycle from the same carry, and a
     second independently-jitted cycle, agree bit-for-bit."""
     variant = get_variant(name)
-    spec, dcfg, qf, qlog, opt, carry = _setup(variant)
-    cycle = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg, frame_size=FS,
+    spec, dcfg, qf, qlog, opt, carry, _ = _setup(variant)
+    cycle = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg, obs=FS,
                                           q_logits=qlog))
     c1, m1 = cycle(carry)
     c2, m2 = cycle(carry)
     _assert_trees_equal(c1, c2)
     _assert_trees_equal(m1, m2)
     cycle_b = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg,
-                                            frame_size=FS, q_logits=qlog))
+                                            obs=FS, q_logits=qlog))
     c3, m3 = cycle_b(carry)
     _assert_trees_equal(c1, c3)
     # and a second chained cycle stays deterministic (priority flush,
@@ -89,13 +101,33 @@ def test_cycle_bitwise_deterministic(name):
     _assert_trees_equal(cycle(c1)[0], cycle_b(c3)[0])
 
 
+@pytest.mark.parametrize("name", DETERMINISM_PARAMS)
+def test_cycle_bitwise_deterministic_vector(name):
+    """The vector-observation path (EnvSpec.observe -> fc-only net,
+    float32 replay) has the same purity guarantee as pixels: re-running
+    the jitted cycle, and an independently-built cycle, agree
+    bit-for-bit under every preset."""
+    variant = get_variant(name)
+    spec, dcfg, qf, qlog, opt, carry, obs = _setup(variant,
+                                                   obs_mode="vector")
+    cycle = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg, obs=obs,
+                                          q_logits=qlog))
+    c1, m1 = cycle(carry)
+    c2, m2 = cycle(carry)
+    _assert_trees_equal(c1, c2)
+    _assert_trees_equal(m1, m2)
+    cycle_b = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg,
+                                            obs=obs, q_logits=qlog))
+    _assert_trees_equal(c1, cycle_b(carry)[0])
+
+
 def test_default_variant_matches_legacy_cycle():
     """VariantConfig() is the identity: the dqn preset reproduces the
     plain DQN cycle bit-for-bit (same formulas; the RNG stream is the
     PR-4 replica derivation with the default seed 0)."""
-    spec, dcfg, qf, _, opt, carry = _setup(get_variant("dqn"))
+    spec, dcfg, qf, _, opt, carry, _obs = _setup(get_variant("dqn"))
     got, _ = jax.jit(make_concurrent_cycle(spec, qf, opt, dcfg,
-                                           frame_size=FS))(carry)
+                                           obs=FS))(carry)
     # legacy reference: the exact seed-era formulas, inline
     from repro.core.dqn import make_update_fn
     from repro.core.replay import replay_add_batch, replay_sample
@@ -310,3 +342,14 @@ def test_variant_smoke_rl_train(name, monkeypatch):
     monkeypatch.setenv("REPRO_KERNEL_BACKEND", "ref")
     from repro.launch import rl_train
     assert rl_train.main(["--variant", name, "--dryrun"]) == 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["dqn", "rainbow"])
+def test_vector_smoke_rl_train(name, monkeypatch):
+    """The tier-2 vector-obs smoke: net='auto' resolves to the MLP trunk
+    and a short run completes end to end."""
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "ref")
+    from repro.launch import rl_train
+    assert rl_train.main(["--variant", name, "--obs-mode", "vector",
+                          "--dryrun"]) == 0
