@@ -22,7 +22,7 @@ import json
 import sys
 
 SECTIONS = ("table1", "transactions", "table4", "roofline", "perf",
-            "env_throughput")
+            "env_throughput", "serve_policy")
 
 
 def main(argv=None) -> None:
@@ -127,6 +127,19 @@ def main(argv=None) -> None:
               f"{steps}-step scans)", flush=True)
         et = env_throughput.run_benchmark(steps=steps)
         for r in et:
+            rows.append((r["name"], r["us_per_call"], r["derived"]))
+
+    # ------------------------------------------------------------------
+    # Policy serving: actions/sec + latency vs microbatch and clients
+    # ------------------------------------------------------------------
+    if "serve_policy" in sections:
+        from benchmarks import serve_policy
+        ticks = 40 if args.full else 20
+        print(f"\n# Policy serving (client grid "
+              f"{serve_policy.CLIENT_GRID}, batch grid "
+              f"{serve_policy.BATCH_GRID}, {ticks} ticks)", flush=True)
+        sp = serve_policy.run_benchmark(ticks=ticks)
+        for r in sp:
             rows.append((r["name"], r["us_per_call"], r["derived"]))
 
     # ------------------------------------------------------------------

@@ -1,0 +1,146 @@
+"""Policy-serving throughput/latency: actions/sec and p50/p99 vs
+microbatch ceiling and concurrent client count.
+
+The serving claim (ROADMAP: "a server is a spec plus a carry") is that
+dynamic microbatching — stacking every observation that arrives within
+a tick window into ONE jitted ``q_forward`` call — turns policy serving
+into the same batch-amortized shape as training inference, so one
+process sustains thousands of concurrent streams. This benchmark pins
+that with two sweeps over the in-process simulated client fleet
+(``repro.api.policy_client``), greedy policy, warm-started buckets (no
+tick ever recompiles):
+
+* ``clients`` sweep — 1 → 1024 concurrent streams at the full
+  microbatch ceiling: actions/sec should grow near-linearly while p50
+  stays flat (the batch axis is nearly free on an accelerator);
+* ``batch`` sweep — 1024 streams served with ``max_batch`` 1 → 1024:
+  ``max_batch=1`` is batch-size-1 serving (one jitted call per
+  request, the classic per-stream server); the committed trajectory
+  requires the full-batch row to beat it by >= 5x actions/sec.
+
+  PYTHONPATH=src python -m benchmarks.serve_policy            # full
+  PYTHONPATH=src python -m benchmarks.serve_policy --smoke    # CI
+
+Wired into ``benchmarks/run.py`` as the ``serve_policy`` section
+(``--record BENCH_<n>.json`` captures the trajectory; numbers discussed
+in docs/serving.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List, Optional, Sequence
+
+import jax
+
+from repro.api.policy_client import SimulatedClients, drive
+from repro.api.serve import PolicyServer, ServeSpec
+from repro.api.spec import ExperimentSpec
+from repro.api.trainers import _Components
+
+CLIENT_GRID = (1, 32, 256, 1024)     # streams at full microbatch
+BATCH_GRID = (1, 32, 1024)           # max_batch at 1024 streams
+
+
+def _server(spec: ExperimentSpec, max_batch: int, n_streams: int,
+            seed: int = 0) -> PolicyServer:
+    """A warm-started greedy server over fresh (untrained) params —
+    serving cost is policy-independent, so the benchmark skips
+    training."""
+    c = _Components(spec)
+    params = c.q_init(jax.random.PRNGKey(seed))
+    srv = PolicyServer(params, c.qf, c.obs, c.dcfg.frame_stack,
+                       c.env.n_actions,
+                       ServeSpec(policy="greedy", max_batch=max_batch,
+                                 seed=seed))
+    srv.warm_start(n_streams)
+    return srv
+
+
+def bench_one(spec: ExperimentSpec, n_clients: int, max_batch: int,
+              ticks: int, tag: str, seed: int = 0) -> Dict:
+    """Time one (clients, max_batch) cell; returns a machine-readable
+    row. us_per_call is the mean wall time of one serve tick (submit
+    all -> flush -> step all)."""
+    server = _server(spec, max_batch, n_clients, seed)
+    clients = SimulatedClients(spec, n_clients, seed=seed + 1)
+    drive(server, clients, max(2, ticks // 4))        # warm the loop
+    stats = drive(server, clients, ticks)
+    return {
+        "name": f"serve_policy_{tag}_n{n_clients}_mb{max_batch}",
+        "clients": n_clients, "max_batch": max_batch, "ticks": ticks,
+        "us_per_call": stats["wall_s"] / ticks * 1e6,
+        "actions_per_s": stats["actions_per_s"],
+        "p50_ms": stats["p50_ms"], "p99_ms": stats["p99_ms"],
+        "backend": jax.default_backend(),
+        "derived": (f"actions_per_s={stats['actions_per_s']:.3e} "
+                    f"p50_ms={stats['p50_ms']:.2f} "
+                    f"p99_ms={stats['p99_ms']:.2f}"),
+    }
+
+
+def run_benchmark(clients: Sequence[int] = CLIENT_GRID,
+                  batches: Sequence[int] = BATCH_GRID,
+                  ticks: int = 20, env: str = "catch",
+                  seed: int = 0) -> List[Dict]:
+    """Both sweeps as machine-readable rows; the batch sweep's rows
+    carry speedup-vs-batch-size-1 in ``derived``."""
+    spec = ExperimentSpec.from_preset("dqn", env=env, net="tiny", seeds=1)
+    rows = []
+    for n in clients:
+        rows.append(bench_one(spec, n, max(batches), ticks, "clients",
+                              seed))
+        r = rows[-1]
+        print(f"{r['name']:<36s} {r['actions_per_s']:12.3e} actions/s  "
+              f"p50 {r['p50_ms']:6.2f} ms  p99 {r['p99_ms']:6.2f} ms",
+              flush=True)
+    n_big = max(clients)
+    base = None
+    for mb in sorted(batches):
+        row = bench_one(spec, n_big, mb, ticks, "batch", seed)
+        base = base or row["actions_per_s"]           # mb grid ascends
+        row["speedup_vs_batch1"] = row["actions_per_s"] / base
+        row["derived"] += f" speedup_vs_batch1={row['speedup_vs_batch1']:.2f}x"
+        rows.append(row)
+        print(f"{row['name']:<36s} {row['actions_per_s']:12.3e} actions/s  "
+              f"p50 {row['p50_ms']:6.2f} ms  "
+              f"{row['speedup_vs_batch1']:5.2f}x vs batch-1", flush=True)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="serving actions/sec + latency vs batch and clients")
+    ap.add_argument("--clients", default=None,
+                    help="comma-separated client counts "
+                         f"(default {','.join(map(str, CLIENT_GRID))})")
+    ap.add_argument("--batches", default=None,
+                    help="comma-separated max_batch values "
+                         f"(default {','.join(map(str, BATCH_GRID))})")
+    ap.add_argument("--ticks", type=int, default=20)
+    ap.add_argument("--env", default="catch")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny grids, assert rows emit")
+    args = ap.parse_args(argv)
+
+    clients = ([int(x) for x in args.clients.split(",")]
+               if args.clients else CLIENT_GRID)
+    batches = ([int(x) for x in args.batches.split(",")]
+               if args.batches else BATCH_GRID)
+    ticks = args.ticks
+    if args.smoke:
+        clients, batches, ticks = (1, 8), (1, 8), 3
+
+    rows = run_benchmark(clients, batches, ticks, env=args.env)
+
+    if args.smoke:
+        assert rows, "benchmark emitted no rows"
+        assert all(r["actions_per_s"] > 0 for r in rows), rows
+        big = [r for r in rows if "speedup_vs_batch1" in r][-1]
+        assert big["speedup_vs_batch1"] > 0, big
+        print(f"SMOKE OK: {len(rows)} rows")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

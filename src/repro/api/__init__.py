@@ -19,6 +19,8 @@ from repro.api.spec import (AlgoSpec, CheckpointSpec, ExperimentSpec,
                             save_run_spec, spec_compat_diff)
 from repro.api.trainers import (TRAINERS, Trainer, build_trainer,
                                 register_trainer)
+from repro.api.serve import (LoadedPolicy, POLICIES, PolicyServer,
+                             ServeSpec, load_policy, make_server)
 
 __all__ = [
     # spec surface
@@ -29,4 +31,8 @@ __all__ = [
     # resume-compatibility guard
     "SpecCompatError", "spec_compat_diff", "check_resume_compat",
     "save_run_spec", "load_run_spec", "RUN_SPEC_FILENAME",
+    # serving surface (a server is a spec plus a carry; policy_client
+    # holds the simulated-client harness)
+    "ServeSpec", "PolicyServer", "LoadedPolicy", "POLICIES",
+    "load_policy", "make_server",
 ]

@@ -1,0 +1,119 @@
+"""In-process simulated clients for the policy serving layer.
+
+Thousands of concurrent "players" driven by the jitted envs from
+``envs/games.py``: each tick every client sends its RAW current
+observation (pixel frame or state vector, per the spec's ``obs_mode``)
+to a :class:`repro.api.serve.PolicyServer`, the server answers with one
+dynamically-microbatched action batch, and the clients step their envs
+with those actions (autoreset semantics — ``first`` flags tell the
+server to zero the stream's frame-stack history exactly when the
+sampler would).
+
+The client fleet is ONE vmapped jitted program (reset / step / observe
+over n streams), so the harness can sustain the >= 1000 concurrent
+streams the serving benchmark exercises without the clients themselves
+becoming the bottleneck. Used by ``launch/serve_policy.py`` (load
+generation + the CI round-trip smoke) and ``benchmarks/serve_policy.py``
+(the BENCH_7 latency/throughput trajectory).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.api.spec import ExperimentSpec
+from repro.envs import make_env
+from repro.envs.games import step_autoreset
+from repro.envs.preprocess import obs_batch, pixel_obs, vector_obs
+
+__all__ = ["SimulatedClients", "drive"]
+
+
+class SimulatedClients:
+    """n concurrent simulated players over one spec's env + obs mode."""
+
+    def __init__(self, spec: ExperimentSpec, n: int, seed: int = 0):
+        if n < 1:
+            raise ValueError(f"need at least one client, got n={n}")
+        env = make_env(spec.env, **spec.env_params)
+        self.env = env
+        self.pipe = (vector_obs(env) if spec.obs_mode == "vector"
+                     else pixel_obs(spec.frame_size))
+        self.n = n
+        self.ids: List[int] = list(range(n))
+        self._obs = jax.jit(lambda st: obs_batch(self.pipe, env, st))
+        self._step = jax.jit(lambda st, a, k: jax.vmap(
+            lambda s, a1, k1: step_autoreset(env, s, a1, k1))(
+                st, a, jax.random.split(k, n)))
+        key = jax.random.PRNGKey(seed)
+        kreset, self._key = jax.random.split(key)
+        self.states = jax.jit(
+            lambda k: jax.vmap(env.reset)(jax.random.split(k, n)))(kreset)
+        # every stream starts an episode: the first submit carries
+        # first=True so the server zeroes its (fresh) stack
+        self.first = np.ones((n,), bool)
+        self.returns = np.zeros((n,), np.float64)
+        self.finished_return_sum = 0.0
+        self.episodes = 0
+
+    def observations(self) -> np.ndarray:
+        """The raw per-stream observations clients would send this tick:
+        (n, *obs_shape) in the pipe's dtype."""
+        return np.asarray(self._obs(self.states))
+
+    def step(self, actions: np.ndarray) -> None:
+        """Advance every stream with its served action (autoreset)."""
+        self._key, ks = jax.random.split(self._key)
+        states, rewards, dones = self._step(
+            self.states, np.asarray(actions, np.int32), ks)
+        self.states = states
+        rewards = np.asarray(rewards)
+        dones = np.asarray(dones)
+        self.returns += rewards
+        self.finished_return_sum += float(self.returns[dones].sum())
+        self.episodes += int(dones.sum())
+        self.returns[dones] = 0.0
+        self.first = dones      # next obs is the reset state's first frame
+
+    def mean_return(self) -> float:
+        """Mean return over finished episodes (0.0 before any finish)."""
+        return (self.finished_return_sum / self.episodes
+                if self.episodes else 0.0)
+
+
+def drive(server, clients: SimulatedClients, ticks: int) -> Dict:
+    """Run the closed loop for ``ticks`` server ticks and return the
+    sustained-load statistics the benchmark records.
+
+    Per tick: every client submits its raw observation, the server
+    drains the queue as dynamic microbatches (ONE jitted Q call per
+    bucket-padded chunk), and the clients step with the returned
+    actions. Latency is per request: submit -> action materialized."""
+    import time
+
+    server.drain_latencies()
+    t0 = time.perf_counter()
+    for _ in range(ticks):
+        obs = clients.observations()
+        server.submit_many(clients.ids, obs, clients.first)
+        acts = server.flush()
+        actions = np.fromiter((acts[i] for i in clients.ids),
+                              np.int32, count=clients.n)
+        clients.step(actions)
+    wall = time.perf_counter() - t0
+    lat = np.asarray(server.drain_latencies())
+    n_actions = ticks * clients.n
+    return {
+        "clients": clients.n,
+        "ticks": ticks,
+        "actions": n_actions,
+        "wall_s": wall,
+        "actions_per_s": n_actions / wall,
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "episodes": clients.episodes,
+        "mean_return": clients.mean_return(),
+    }

@@ -188,6 +188,19 @@ class ExperimentSpec:
                         ("train_period", self.algo.train_period)):
             if v < 1:
                 raise ValueError(f"{name} must be >= 1, got {v}")
+        # the driver loop computes `(cycle + 1) % cadence` — a 0 cadence
+        # is a ZeroDivisionError deep inside training, so reject it here
+        # with the intent spelled out
+        for name, v in (("schedule.eval_every", self.schedule.eval_every),
+                        ("schedule.eval_episodes",
+                         self.schedule.eval_episodes),
+                        ("checkpoint.every", self.checkpoint.every)):
+            if v < 1:
+                raise ValueError(
+                    f"{name} must be >= 1, got {v} (the driver fires on "
+                    f"`cycle % {name.split('.')[-1]} == 0` and always "
+                    "runs the final cycle; for final-cycle-only "
+                    f"behaviour set {name} = schedule.cycles)")
         self.variant.validate()
 
     # -- derived runtime configs ------------------------------------------

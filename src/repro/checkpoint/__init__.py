@@ -1,1 +1,3 @@
-from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint, latest_step  # noqa: F401
+from repro.checkpoint.ckpt import (save_checkpoint, restore_checkpoint,  # noqa: F401
+                                   restore_latest, latest_step, list_steps,
+                                   RESTORE_ERRORS)

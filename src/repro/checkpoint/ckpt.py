@@ -3,8 +3,20 @@
 Flattens a pytree to path-keyed arrays; on restore, arrays are placed
 back onto the caller's shardings (``jax.device_put`` with the target
 NamedSharding tree), so a checkpoint written on one mesh restores onto
-another — the standard reshard-on-restore pattern. Writes are atomic
-(tmp + rename) and steps are kept under ``<dir>/step_<n>.npz``.
+another — the standard reshard-on-restore pattern. Steps are kept under
+``<dir>/step_<n>.npz``.
+
+Durability contract (checkpoints are production serving artifacts, not
+just a resume convenience — see docs/serving.md):
+
+* writes are atomic AND durable: tmp file, ``fsync`` before the rename,
+  ``os.replace``, then an fsync of the directory so the rename itself
+  survives a power cut;
+* a failed write never leaks its tmp file into the checkpoint dir;
+* :func:`restore_latest` walks down from the newest step past any
+  checkpoint that cannot be restored (truncated/corrupt/partial), so
+  one torn file never blocks ``--resume`` or a policy server boot —
+  callers get the skipped paths back to warn about.
 """
 
 from __future__ import annotations
@@ -12,12 +24,22 @@ from __future__ import annotations
 import os
 import re
 import tempfile
-from typing import Any, Optional
+import zipfile
+import zlib
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 SEP = "/"
+
+# What a truncated/corrupt .npz surfaces as: zipfile errors on a torn
+# archive, zlib/value/EOF errors on a torn member, OSError on unreadable
+# files, ValueError also covers template mismatches (restore_latest must
+# not "fall back" past a legitimate structural error silently — it
+# reports every skipped path so callers can tell the two apart).
+RESTORE_ERRORS = (OSError, ValueError, EOFError, KeyError,
+                  zipfile.BadZipFile, zlib.error)
 
 
 def _flatten(tree: Any, prefix: str = ""):
@@ -36,10 +58,41 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
     arrays = {path: np.asarray(leaf) for path, leaf in _flatten(tree)}
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
     fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
-    with os.fdopen(fd, "wb") as f:
-        np.savez(f, **arrays)
-    os.replace(tmp, path)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **arrays)
+            # flush to stable storage BEFORE the rename: os.replace is
+            # atomic in the namespace but says nothing about the data —
+            # without this, a crash can leave a fully-named step_*.npz
+            # holding truncated bytes, which latest_step() then selects
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        # never leak the tmp file into the checkpoint dir on a failed
+        # write (np.savez raising used to strand it there forever)
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    _fsync_dir(ckpt_dir)
     return path
+
+
+def _fsync_dir(path: str) -> None:
+    """Make a completed rename durable (best-effort on platforms whose
+    directories cannot be opened/fsynced)."""
+    try:
+        dfd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(dfd)
+    except OSError:
+        pass
+    finally:
+        os.close(dfd)
 
 
 def _unflatten_into(template: Any, arrays, prefix: str = ""):
@@ -86,9 +139,38 @@ def restore_checkpoint(ckpt_dir: str, step: int, template: Any,
     return tree
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def list_steps(ckpt_dir: str) -> List[int]:
+    """All checkpointed step numbers in ``ckpt_dir``, ascending."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
-             if (m := re.match(r"step_(\d+)\.npz$", f))]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(m.group(1)) for f in os.listdir(ckpt_dir)
+                  if (m := re.match(r"step_(\d+)\.npz$", f)))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_latest(ckpt_dir: str, template: Any,
+                   shardings: Optional[Any] = None
+                   ) -> Tuple[Optional[int], Any, List[str]]:
+    """Restore the newest *restorable* checkpoint.
+
+    Walks down from the latest step; a checkpoint that fails to restore
+    (torn write from a crash, truncated copy, structural mismatch) is
+    skipped and the walk continues to the previous step. Returns
+    ``(step, tree, skipped)`` where ``skipped`` lists
+    ``"<path>: <error>"`` for every file passed over — callers MUST
+    surface these (a skipped checkpoint means lost progress and, for a
+    template mismatch, possibly the wrong spec). ``(None, None,
+    skipped)`` when nothing restores."""
+    skipped: List[str] = []
+    for step in reversed(list_steps(ckpt_dir)):
+        path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+        try:
+            return step, restore_checkpoint(ckpt_dir, step, template,
+                                            shardings), skipped
+        except RESTORE_ERRORS as e:
+            skipped.append(f"{path}: {type(e).__name__}: {e}")
+    return None, None, skipped

@@ -5,3 +5,4 @@ flush-at-sync staging semantics and the generalized actor-learner."""
 from repro.core.replay import (replay_init, replay_add_batch, replay_sample,  # noqa: F401
                                replay_size)
 from repro.core.dqn import q_loss, egreedy  # noqa: F401
+from repro.core.policy import policy_step, stream_keys  # noqa: F401

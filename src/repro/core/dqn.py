@@ -131,14 +131,15 @@ def c51_loss_variant(params, target_params, batch: Dict[str, jax.Array],
 
 
 def egreedy(q_values: jax.Array, eps: jax.Array, key: jax.Array) -> jax.Array:
-    """q_values: (W, A) -> actions (W,). One key per call; per-stream
-    randomness derived inside."""
-    W, A = q_values.shape
-    kr, ka = jax.random.split(key)
-    greedy = jnp.argmax(q_values, axis=-1)
-    rand = jax.random.randint(ka, (W,), 0, A)
-    explore = jax.random.uniform(kr, (W,)) < eps
-    return jnp.where(explore, rand, greedy).astype(jnp.int32)
+    """q_values: (W, A) -> actions (W,). The one round key is split into
+    W per-stream keys and each row draws from its own
+    (``core.policy.egreedy_stream``), so stream i's randomness is
+    independent of W and of the other rows — the batch-composition
+    invariance the serving layer's microbatching relies on."""
+    from repro.core.policy import egreedy_stream, stream_keys
+    W = q_values.shape[0]
+    eps = jnp.broadcast_to(jnp.asarray(eps, jnp.float32), (W,))
+    return jax.vmap(egreedy_stream)(q_values, eps, stream_keys(key, W))
 
 
 def make_update_fn(q_forward: Callable, opt, cfg: DQNConfig,

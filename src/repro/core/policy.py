@@ -1,0 +1,69 @@
+"""Stateless policy evaluation — THE action-selection primitive.
+
+``policy_step`` turns (params, a batch of observation stacks, per-stream
+RNG keys) into actions with ONE batched ``q_forward`` call. It is the
+single function behind every action the system emits: the sampler's
+``sync_round`` (training + ``evaluate``) and the serving layer
+(``repro.api.serve.PolicyServer``) both call it, so an action served to
+a client is bitwise-identical to the action ``evaluate`` would choose
+for the same (params, observation stack, key) — by construction, not by
+test alone (tests/test_serve_policy.py locks it anyway).
+
+Per-stream RNG discipline: each stream's exploration draw derives only
+from *its own* key (``egreedy_stream``), never from the batch shape or
+the neighbouring rows. That is the property that makes dynamic
+microbatching sound — a request's action cannot depend on which other
+requests happened to share its batch, and padding a microbatch up to a
+compile-size bucket never changes the actions served to the real rows.
+Batch-level call sites (``core.dqn.egreedy``) split their one round key
+into W per-stream keys and vmap this primitive.
+
+NoisyNet: pass ``noise_key`` to draw parameter noise for the call
+(exploration serving); ``None`` runs the μ-only network (greedy/ε
+serving and evaluation). The noise draw depends only on the key and the
+parameter shapes, so it is batch-size invariant too.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["egreedy_stream", "stream_keys", "policy_step"]
+
+
+def stream_keys(key: jax.Array, n: int) -> jax.Array:
+    """One round key -> n per-stream keys (the derivation ``sync_round``
+    uses; servers mirroring an evaluation batch reuse it)."""
+    return jax.random.split(key, n)
+
+
+def egreedy_stream(q_row: jax.Array, eps: jax.Array,
+                   key: jax.Array) -> jax.Array:
+    """ε-greedy for ONE stream: q_row (A,) -> scalar int32 action. All
+    randomness derives from ``key`` alone."""
+    kr, ka = jax.random.split(key)
+    greedy = jnp.argmax(q_row, axis=-1)
+    rand = jax.random.randint(ka, (), 0, q_row.shape[-1])
+    explore = jax.random.uniform(kr, ()) < eps
+    return jnp.where(explore, rand, greedy).astype(jnp.int32)
+
+
+def policy_step(q_forward: Callable, params, obs: jax.Array,
+                eps: Union[float, jax.Array], keys: jax.Array,
+                noise_key: Optional[jax.Array] = None) -> jax.Array:
+    """Actions for a batch of observation stacks.
+
+    ``obs``: (B, *obs_shape, K) stacked observations; ``eps``: scalar or
+    (B,) per-stream exploration rates (0 = greedy); ``keys``: (B, 2)
+    per-stream keys; ``noise_key``: optional NoisyNet draw for the whole
+    call (None = μ-only). ONE batched ``q_forward`` transaction — the
+    many-streams-one-inference-batch discipline — then a vmapped
+    per-stream ε-greedy, so row i's action depends only on
+    (params, obs[i], eps[i], keys[i], noise_key)."""
+    q = (q_forward(params, obs) if noise_key is None
+         else q_forward(params, obs, noise_key))
+    eps = jnp.broadcast_to(jnp.asarray(eps, jnp.float32), q.shape[:1])
+    return jax.vmap(egreedy_stream)(q, eps, keys)

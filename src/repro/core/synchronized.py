@@ -23,7 +23,7 @@ from repro.config import DQNConfig
 from repro.envs.games import EnvSpec, step_autoreset
 from repro.envs.preprocess import (ObsPipeline, as_obs, init_obs_stack,
                                    obs_batch, push_frame, reset_stack_where)
-from repro.core.dqn import egreedy
+from repro.core.policy import policy_step, stream_keys
 
 # ``obs`` arguments below accept a plain int (legacy pixel frame size)
 # or an ObsPipeline (pixels | vector) — see envs/preprocess.py.
@@ -56,9 +56,11 @@ def sync_round(spec: EnvSpec, q_forward: Callable, params,
     pipe = as_obs(obs)
     key, kact, kstep = jax.random.split(s.key, 3)
     cur = s.stack                                           # (W, *obs, K)
-    qvals = q_forward(params, cur)                          # ONE batched call
-    actions = egreedy(qvals, eps, kact)
-    W = actions.shape[0]
+    W = cur.shape[0]
+    # ONE batched Q call + per-stream ε draws — the same stateless
+    # primitive the serving layer batches client streams through
+    # (core/policy.py), so served actions match these bitwise.
+    actions = policy_step(q_forward, params, cur, eps, stream_keys(kact, W))
     env_states, rewards, dones = jax.vmap(
         lambda st, a, k: step_autoreset(spec, st, a, k)
     )(s.env_states, actions, jax.random.split(kstep, W))

@@ -52,6 +52,7 @@ import argparse
 import dataclasses
 import json
 import os
+import tempfile
 import time
 
 import jax
@@ -61,7 +62,7 @@ from repro.api import (ExperimentSpec, SpecCompatError, build_trainer,
                        check_resume_compat, load_run_spec, save_run_spec)
 from repro.api.spec import MODES
 from repro.configs.dqn_nature import VARIANTS, get_variant
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.checkpoint import latest_step, restore_latest, save_checkpoint
 
 
 def parse_args(argv=None):
@@ -196,6 +197,37 @@ def resolve_spec(args) -> ExperimentSpec:
     return spec
 
 
+def _trim_metrics_jsonl(path, start_cycle):
+    """Drop metrics rows with cycle > start_cycle (plus any torn
+    trailing line an interrupted run left) so the resumed loop never
+    produces two rows per (cycle, replica). The trimmed copy is written
+    to a tmp file in the same directory, fsynced and renamed over the
+    original — an interrupt mid-trim leaves the full history intact."""
+    kept = []
+    with open(path) as f:
+        for ln in f:
+            try:
+                row = json.loads(ln)
+            except ValueError:
+                continue
+            if row.get("cycle", 0) <= start_cycle:
+                kept.append(ln)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               prefix=".metrics-", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.writelines(kept)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
 def main(argv=None):
     args = parse_args(argv)
     try:
@@ -221,6 +253,7 @@ def main(argv=None):
     seeds_host = [spec.seed + r for r in range(P)]
 
     start_cycle = 0
+    carry = None
     last = (latest_step(ckpt_dir) if args.resume and ckpt_dir else None)
     if last is not None:
         try:
@@ -240,11 +273,22 @@ def main(argv=None):
             return 2
     if last is not None:
         # restore needs only the carry's tree *structure*, so build the
-        # template abstractly — no param init, no prepopulate scan
-        carry = restore_checkpoint(ckpt_dir, last, trainer.init_template())
-        start_cycle = last
-        print(f"resumed {ckpt_dir} at cycle {last}", flush=True)
-    else:
+        # template abstractly — no param init, no prepopulate scan.
+        # A torn checkpoint (crash mid-save on an old layout, partial
+        # copy, disk-full) is skipped with a warning and the walk falls
+        # back to the newest step that still restores.
+        step, carry, skipped = restore_latest(ckpt_dir,
+                                              trainer.init_template())
+        for s in skipped:
+            print(f"WARNING: skipped unrestorable checkpoint {s}",
+                  flush=True)
+        if carry is not None:
+            start_cycle = step
+            print(f"resumed {ckpt_dir} at cycle {step}", flush=True)
+        else:
+            print(f"no restorable checkpoint in {ckpt_dir}; "
+                  "starting fresh", flush=True)
+    if carry is None:
         carry = trainer.init_carry()
 
     metrics_f = None
@@ -252,22 +296,7 @@ def main(argv=None):
         os.makedirs(os.path.dirname(spec.metrics.jsonl) or ".",
                     exist_ok=True)
         if os.path.exists(spec.metrics.jsonl):
-            # the loop emits every cycle > start_cycle, so drop those
-            # rows (all of them on a fresh run) — the file must never
-            # hold two rows per (cycle, replica). A partially-written
-            # last line (the state an interrupted run leaves) is dropped
-            # the same way.
-            kept = []
-            with open(spec.metrics.jsonl) as f:
-                for ln in f:
-                    try:
-                        row = json.loads(ln)
-                    except ValueError:
-                        continue
-                    if row.get("cycle", 0) <= start_cycle:
-                        kept.append(ln)
-            with open(spec.metrics.jsonl, "w") as f:
-                f.writelines(kept)
+            _trim_metrics_jsonl(spec.metrics.jsonl, start_cycle)
         metrics_f = open(spec.metrics.jsonl, "a", buffering=1)
 
     def emit(i, m, evals=None):

@@ -117,6 +117,24 @@ def test_validate_rejects_bad_specs():
         ExperimentSpec(frame_size=64).validate()
 
 
+def test_validate_rejects_zero_cadences():
+    """eval_every=0 used to surface as a raw ZeroDivisionError deep in
+    the driver loop ('% sched.eval_every'); the spec now rejects every
+    zero/negative cadence up front with the final-cycle-only recipe."""
+    for field, section in (("eval_every", "schedule"),
+                           ("eval_episodes", "schedule"),
+                           ("every", "checkpoint")):
+        for bad in (0, -3):
+            kw = {section: dataclasses.replace(
+                getattr(ExperimentSpec(), section), **{field: bad})}
+            with pytest.raises(ValueError, match=field) as ei:
+                ExperimentSpec(**kw).validate()
+            assert str(bad) in str(ei.value)
+    # the actionable recipe: fire only on the always-run final cycle
+    with pytest.raises(ValueError, match="schedule.cycles"):
+        ExperimentSpec(schedule=ScheduleSpec(eval_every=0)).validate()
+
+
 def test_roundtrip_env_params_and_obs_mode():
     """The PR-6 fields survive canonical JSON byte-for-byte."""
     spec = _tiny_spec(env="seeker", env_params={"size": 12, "n_hazards": 2},

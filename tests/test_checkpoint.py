@@ -1,4 +1,6 @@
 import dataclasses
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -6,7 +8,8 @@ import numpy as np
 import pytest
 
 from repro import compat
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.checkpoint import (latest_step, list_steps, restore_checkpoint,
+                              restore_latest, save_checkpoint)
 from repro.core.concurrent import TrainerCarry
 from repro.core.synchronized import SamplerState
 
@@ -127,6 +130,87 @@ def test_resume_spec_compat_guard(tmp_path):
     with pytest.raises(SpecCompatError, match="fresh directory"):
         save_run_spec(d, changed)
     assert load_run_spec(d) == spec            # stored spec untouched
+
+
+def test_restore_latest_walks_past_torn_checkpoint(tmp_path):
+    """A checkpoint truncated mid-write (torn) must not block resume:
+    restore_latest falls back to the newest step that still restores and
+    NAMES the file it skipped."""
+    tree = {"w": jnp.arange(4.0)}
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, tree)
+    save_checkpoint(d, 2, tree)
+    p2 = os.path.join(d, "step_00000002.npz")
+    with open(p2, "rb") as f:
+        head = f.read(57)
+    with open(p2, "wb") as f:
+        f.write(head)                              # torn: crash mid-write
+    assert latest_step(d) == 2
+    assert list_steps(d) == [1, 2]
+    step, got, skipped = restore_latest(d, tree)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.arange(4.0))
+    assert len(skipped) == 1 and "step_00000002.npz" in skipped[0]
+
+
+def test_restore_latest_nothing_restorable(tmp_path):
+    d = str(tmp_path / "ckpt")
+    os.makedirs(d)
+    for name in ("step_00000001.npz", "step_00000002.npz"):
+        with open(os.path.join(d, name), "wb") as f:
+            f.write(b"PK\x03\x04 not actually a zip")
+    step, got, skipped = restore_latest(d, {"w": jnp.ones((2,))})
+    assert step is None and got is None
+    assert len(skipped) == 2
+    # empty / missing dirs are "fresh run", not errors
+    assert restore_latest(str(tmp_path / "nope"), {}) == (None, None, [])
+
+
+def test_save_failure_leaves_no_debris(tmp_path, monkeypatch):
+    """An interrupted save must leave neither a half-written step file
+    nor a stray mkstemp tmp behind — the pre-fix bug left the tmp file
+    and, worse, a rename of an unsynced file could tear the step."""
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, {"w": jnp.ones((2,))})
+
+    def boom(*a, **kw):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(np, "savez", boom)
+    with pytest.raises(OSError, match="disk full"):
+        save_checkpoint(d, 2, {"w": jnp.ones((2,))})
+    assert sorted(os.listdir(d)) == ["step_00000001.npz"]
+    assert list_steps(d) == [1]
+
+
+def test_metrics_trim_is_atomic(tmp_path, monkeypatch):
+    """Resume-time JSONL trimming rewrites via tmp+rename: rows past the
+    resume cycle (and torn trailing lines) are dropped, and a crash
+    mid-trim leaves the ORIGINAL history intact — the pre-fix
+    truncating open(..., "w") lost the whole file."""
+    from repro.launch.rl_train import _trim_metrics_jsonl
+
+    path = str(tmp_path / "metrics.jsonl")
+    rows = [json.dumps({"cycle": c, "loss": 0.1 * c}) + "\n"
+            for c in range(1, 6)]
+    with open(path, "w") as f:
+        f.writelines(rows)
+        f.write('{"cycle": 6, "loss"')              # torn trailing line
+    _trim_metrics_jsonl(path, 3)
+    with open(path) as f:
+        kept = [json.loads(ln) for ln in f]
+    assert [r["cycle"] for r in kept] == [1, 2, 3]
+
+    original = open(path).read()
+
+    def boom(*a, **kw):
+        raise OSError("crash mid-trim")
+
+    monkeypatch.setattr(os, "replace", boom)
+    with pytest.raises(OSError, match="crash mid-trim"):
+        _trim_metrics_jsonl(path, 1)
+    assert open(path).read() == original            # history survives
+    assert os.listdir(tmp_path) == ["metrics.jsonl"]  # no tmp debris
 
 
 def test_restore_onto_shardings(tmp_path):

@@ -1,0 +1,242 @@
+"""Policy serving guarantees (repro.api.serve):
+
+1. **Bitwise identity with evaluation**: for the same (params, raw
+   observation sequence, per-stream keys), the server's actions equal
+   ``evaluate``'s round-by-round choices exactly — on every variant
+   preset (plain DQN, NoisyNet, full Rainbow) and both observation
+   modes. The server IS the evaluator, microbatched.
+2. **Batch-shape invariance**: padding a microbatch up to a compile
+   bucket, or splitting it into ``max_batch`` chunks, never changes the
+   action any stream receives (per-stream RNG keys, scatter-drop
+   padding) — the property that makes dynamic microbatching sound.
+3. NoisyNet serving draws one noise key per tick and stays
+   batch-invariant; serving ``noisy`` off a non-noisy checkpoint is
+   rejected at construction.
+4. ``load_policy`` round-trips a real checkpoint dir (spec.json + carry)
+   and serves through the newest *restorable* step, naming torn files
+   it skipped; the ``serve_policy`` CLI smoke-loops end to end.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, build_trainer, save_run_spec
+from repro.api.policy_client import SimulatedClients, drive
+from repro.api.serve import (PolicyServer, ServeSpec, load_policy,
+                             make_server)
+from repro.api.spec import AlgoSpec, ScheduleSpec
+from repro.api.trainers import _Components
+from repro.checkpoint import save_checkpoint
+from repro.configs.dqn_nature import get_variant
+from repro.core.policy import stream_keys
+from repro.core.synchronized import SamplerState, sync_round
+from repro.envs.preprocess import init_obs_stack, obs_batch, push_frame
+
+TINY = dict(
+    env="catch", envs=4, frame_size=10,
+    schedule=ScheduleSpec(cycles=2, cycle_steps=16, prepopulate=32,
+                          eval_every=1, eval_episodes=4),
+    algo=AlgoSpec(minibatch_size=8, replay_capacity=128, train_period=4,
+                  eps_anneal_steps=1000))
+
+
+def _spec(variant="dqn", obs_mode="pixels", **over):
+    net = "mlp_tiny" if obs_mode == "vector" else "tiny"
+    return ExperimentSpec(variant=get_variant(variant), obs_mode=obs_mode,
+                          net=net, **{**TINY, **over})
+
+
+def _fresh(spec, serve, seed=0):
+    """(components, params, server) over untrained params."""
+    c = _Components(spec)
+    params = c.q_init(jax.random.PRNGKey(seed))
+    srv = PolicyServer(params, c.qf, c.obs, c.dcfg.frame_stack,
+                       c.env.n_actions, serve)
+    return c, params, srv
+
+
+# ---------------------------------------------------------------------------
+# 1. bitwise identity with evaluate's round-by-round actions
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["dqn", "noisy", "rainbow"])
+@pytest.mark.parametrize("obs_mode", ["pixels", "vector"])
+def test_served_actions_match_evaluate_bitwise(variant, obs_mode):
+    _assert_mirror(_spec(variant, obs_mode), policy="egreedy")
+
+
+def test_served_actions_match_greedy_eval():
+    _assert_mirror(_spec("dqn"), policy="greedy")
+
+
+def _assert_mirror(spec, policy, rounds=5, n=4, seed=0):
+    """Replay evaluate's exact loop against the server: same initial
+    stacks, same per-round kact chain (overridden via flush(keys=...)),
+    clients sending the raw frames evaluate would render. Every round's
+    served actions must equal sync_round's bitwise."""
+    c, params, srv = _fresh(
+        spec, ServeSpec(policy=policy, eps=0.05, max_batch=8), seed)
+    pipe, env, cfg = c.obs, c.env, c.dcfg
+    eps = jnp.float32(0.0 if policy == "greedy" else cfg.eval_eps)
+    kinit, krun = jax.random.split(jax.random.PRNGKey(seed + 1))
+    states = jax.vmap(env.reset)(jax.random.split(kinit, n))
+    stack = push_frame(init_obs_stack(n, pipe, cfg.frame_stack),
+                       obs_batch(pipe, env, states))
+    s = SamplerState(states, stack, krun)
+    ids = list(range(n))
+    first = np.ones((n,), bool)
+    for _ in range(rounds):
+        frame = np.asarray(obs_batch(pipe, env, s.env_states))
+        kact = jax.random.split(s.key, 3)[1]      # sync_round's action key
+        srv.submit_many(ids, frame, first)
+        acts = srv.flush(keys=np.asarray(stream_keys(kact, n)))
+        s, tr = sync_round(env, c.qf, params, s, eps, pipe)
+        served = np.array([acts[i] for i in ids], np.int32)
+        np.testing.assert_array_equal(served, np.asarray(tr["action"]))
+        first = np.asarray(tr["done"])            # autoreset: zero stack
+
+
+# ---------------------------------------------------------------------------
+# 2. microbatch padding / chunking never changes an action
+# ---------------------------------------------------------------------------
+
+def _served_rounds(spec, serve, rounds=4, n=5, seed=0):
+    """Closed-loop action sequence (rounds, n) under one server config;
+    identical configs-modulo-batching must produce identical arrays."""
+    _, _, srv = _fresh(spec, serve, seed)
+    clients = SimulatedClients(spec, n, seed=seed + 1)
+    out = []
+    for _ in range(rounds):
+        srv.submit_many(clients.ids, clients.observations(), clients.first)
+        acts = srv.flush()
+        actions = np.array([acts[i] for i in clients.ids], np.int32)
+        clients.step(actions)
+        out.append(actions)
+    return np.stack(out)
+
+
+@pytest.mark.parametrize("policy", ["egreedy", "noisy"])
+def test_bucket_padding_and_chunking_invariance(policy):
+    spec = _spec("noisy" if policy == "noisy" else "dqn")
+    exact = _served_rounds(spec, ServeSpec(policy=policy, buckets=(5,),
+                                           max_batch=5))
+    padded = _served_rounds(spec, ServeSpec(policy=policy, max_batch=64))
+    chunked = _served_rounds(spec, ServeSpec(policy=policy, max_batch=2))
+    np.testing.assert_array_equal(exact, padded)
+    np.testing.assert_array_equal(exact, chunked)
+
+
+def test_padding_never_touches_real_stream_state():
+    # a 1-request flush through an 8-wide bucket scatters only slot 0:
+    # the other streams' stacks must stay bitwise what they were
+    spec = _spec("dqn")
+    _, _, srv = _fresh(spec, ServeSpec(max_batch=8))
+    obs = np.zeros((3,) + srv.pipe.shape, srv.pipe.dtype)
+    srv.submit_many([0, 1, 2], obs, np.ones((3,), bool))
+    srv.flush()
+    before = np.asarray(srv._stacks)
+    srv.submit(0, obs[0])
+    srv.flush()                                   # padded 1 -> bucket
+    after = np.asarray(srv._stacks)
+    np.testing.assert_array_equal(before[1:], after[1:])
+
+
+def test_reconnect_replays_identically():
+    # stream s's t-th draw keys on (seed, s, t) only: a server restart
+    # with the same seed re-serves the same action sequence
+    spec = _spec("dqn")
+    a = _served_rounds(spec, ServeSpec(max_batch=8), seed=3)
+    b = _served_rounds(spec, ServeSpec(max_batch=8), seed=3)
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# 3. serving-spec validation
+# ---------------------------------------------------------------------------
+
+def test_serve_spec_validates():
+    with pytest.raises(ValueError, match="policy"):
+        ServeSpec(policy="boltzmann").validate()
+    with pytest.raises(ValueError, match="eps"):
+        ServeSpec(eps=1.5).validate()
+    with pytest.raises(ValueError, match="max_batch"):
+        ServeSpec(max_batch=0).validate()
+    assert ServeSpec(max_batch=8).resolved_buckets() == (1, 2, 4, 8)
+    assert ServeSpec(max_batch=8, buckets=(3, 16)).resolved_buckets() \
+        == (3, 8)
+
+
+def test_noisy_policy_requires_noisy_checkpoint(tmp_path):
+    d = _checkpointed_run(tmp_path, _spec("dqn"))
+    loaded = load_policy(str(d))
+    with pytest.raises(ValueError, match="NoisyNet"):
+        make_server(loaded, ServeSpec(policy="noisy"))
+
+
+# ---------------------------------------------------------------------------
+# 4. checkpoint-dir round trip + CLI smoke
+# ---------------------------------------------------------------------------
+
+def _checkpointed_run(tmp_path, spec, step=1):
+    d = tmp_path / "run"
+    trainer = build_trainer(spec)
+    save_run_spec(str(d), spec)
+    save_checkpoint(str(d), step, trainer.init_carry())
+    return d
+
+
+@pytest.mark.parametrize("obs_mode", ["pixels", "vector"])
+def test_load_policy_serves_checkpoint(tmp_path, obs_mode):
+    spec = _spec("dqn", obs_mode)
+    d = _checkpointed_run(tmp_path, spec)
+    loaded = load_policy(str(d))
+    assert loaded.step == 1 and loaded.skipped == []
+    assert loaded.spec == spec
+    srv = make_server(loaded, ServeSpec(max_batch=8))
+    clients = SimulatedClients(spec, 3, seed=1)
+    stats = drive(srv, clients, 3)
+    assert stats["actions"] == 9
+    assert stats["p99_ms"] > 0
+
+
+def test_load_policy_skips_torn_checkpoint(tmp_path):
+    spec = _spec("dqn")
+    d = _checkpointed_run(tmp_path, spec, step=1)
+    torn = d / "step_00000002.npz"
+    torn.write_bytes((d / "step_00000001.npz").read_bytes()[:100])
+    loaded = load_policy(str(d))
+    assert loaded.step == 1
+    assert len(loaded.skipped) == 1 and "step_00000002" in loaded.skipped[0]
+
+
+def test_load_policy_without_spec_is_actionable(tmp_path):
+    with pytest.raises(ValueError, match="spec"):
+        load_policy(str(tmp_path))
+
+
+def test_serve_policy_cli_smoke(tmp_path, capsys):
+    from repro.launch.serve_policy import main
+    spec = _spec("dqn")
+    d = _checkpointed_run(tmp_path, spec)
+    rc = main(["--ckpt-dir", str(d), "--clients", "4", "--ticks", "3",
+               "--max-batch", "8", "--warm-start", "--smoke"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "SERVE OK" in out and "warm start" in out
+
+
+def test_population_checkpoint_serves_one_replica(tmp_path):
+    spec = _spec("dqn", mode="population", seeds=2)
+    d = _checkpointed_run(tmp_path, spec)
+    l0 = load_policy(str(d), replica=0)
+    l1 = load_policy(str(d), replica=1)
+    leaves0 = jax.tree_util.tree_leaves(l0.params)
+    leaves1 = jax.tree_util.tree_leaves(l1.params)
+    assert all(np.asarray(a).shape == np.asarray(b).shape
+               for a, b in zip(leaves0, leaves1))
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(leaves0, leaves1))
+    with pytest.raises(ValueError, match="replica"):
+        load_policy(str(d), replica=5)
