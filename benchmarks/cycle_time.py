@@ -1,0 +1,76 @@
+"""End-to-end cycle-time benchmark: us per jitted trainer cycle (and
+the env-steps/s it implies) for representative variant presets, built
+through the same ``build_trainer`` path every launcher uses — so the
+number tracks the real training hot loop, not a stripped-down proxy.
+
+  PYTHONPATH=src python -m benchmarks.cycle_time [--full]
+
+Also times a packed 4-replica population fleet for the scalar preset:
+the sweep layer (repro.api.sweep) executes same-except-seed runs as one
+vmapped program, and cycle_dqn_p4 vs 4x cycle_dqn_p1 is exactly the
+amortization it buys. Rows fold into the committed BENCH_<n>.json
+trajectory via ``benchmarks.run --sections cycle_time --record``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import jax
+
+from repro.api import ExperimentSpec, ScheduleSpec, AlgoSpec, build_trainer
+from repro.configs.dqn_nature import get_variant
+
+# (preset, replicas): rainbow stays at P=1 — it is the compile-heaviest
+# program and the packing story is preset-independent
+CASES = (("dqn", 1), ("dqn", 4), ("rainbow", 1))
+
+
+def bench_spec(preset: str, seeds: int, full: bool) -> ExperimentSpec:
+    return ExperimentSpec(
+        mode="population", env="catch", variant=get_variant(preset),
+        envs=8, frame_size=84 if full else 10, seeds=seeds,
+        schedule=ScheduleSpec(cycles=1, cycle_steps=256, prepopulate=256,
+                              eval_every=1, eval_episodes=1),
+        algo=AlgoSpec(replay_capacity=4096, eps_anneal_steps=10_000))
+
+
+def _time_cycle(trainer, iters: int) -> float:
+    carry = trainer.init_carry()
+    carry, m = trainer.cycle(carry)          # compile + warm
+    jax.block_until_ready(m)
+    t0 = time.time()
+    for _ in range(iters):
+        carry, m = trainer.cycle(carry)
+    jax.block_until_ready(m)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run_benchmark(full: bool = False, iters: int = 5) -> List[Dict]:
+    rows = []
+    for preset, seeds in CASES:
+        spec = bench_spec(preset, seeds, full)
+        us = _time_cycle(build_trainer(spec), iters)
+        steps_per_cycle = spec.schedule.cycle_steps * seeds
+        sps = steps_per_cycle / (us / 1e6)
+        rows.append({"name": f"cycle_{preset}_p{seeds}",
+                     "us_per_call": us,
+                     "derived": f"env_steps_per_s={sps:.0f}"})
+        print(f"{preset:8s} P={seeds}  {us / 1e3:9.2f} ms/cycle  "
+              f"{sps:10.0f} env-steps/s", flush=True)
+    return rows
+
+
+def main(argv=None) -> List[Dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="84x84 Nature-CNN geometry instead of 10x10")
+    ap.add_argument("--iters", type=int, default=5)
+    args = ap.parse_args(argv)
+    return run_benchmark(full=args.full, iters=args.iters)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,10 +9,14 @@ Table-1 geometry (84x84 Nature CNN) and longer learning runs.
       --record BENCH_7.json
 
 ``--sections`` selects a comma-separated subset of {table1, transactions,
-table4, roofline, perf, env_throughput}; ``--record FILE`` additionally
-writes the rows as machine-readable JSON (name/us_per_call/derived plus
-run metadata) so successive ``BENCH_<n>.json`` files committed to the
-repo form a throughput trajectory across PRs.
+table4, roofline, perf, env_throughput, serve_policy, cycle_time,
+per_ops}; ``--record FILE`` additionally writes the rows as
+machine-readable JSON (name/us_per_call/derived plus run metadata) so
+successive ``BENCH_<n>.json`` files committed to the repo form a
+throughput trajectory across PRs. ``cycle_time`` times the full jitted
+trainer cycle (incl. a packed 4-replica fleet — the sweep packer's
+amortization); ``per_ops`` folds the PER-sampling and C51-projection
+microbenchmarks into the recorded rows (they previously only printed).
 """
 
 from __future__ import annotations
@@ -22,7 +26,7 @@ import json
 import sys
 
 SECTIONS = ("table1", "transactions", "table4", "roofline", "perf",
-            "env_throughput", "serve_policy")
+            "env_throughput", "serve_policy", "cycle_time", "per_ops")
 
 
 def main(argv=None) -> None:
@@ -141,6 +145,33 @@ def main(argv=None) -> None:
         sp = serve_policy.run_benchmark(ticks=ticks)
         for r in sp:
             rows.append((r["name"], r["us_per_call"], r["derived"]))
+
+    # ------------------------------------------------------------------
+    # End-to-end cycle time through build_trainer (incl. packed fleet)
+    # ------------------------------------------------------------------
+    if "cycle_time" in sections:
+        from benchmarks import cycle_time
+        print("\n# Trainer cycle time (build_trainer path; p4 = packed "
+              "4-replica fleet)", flush=True)
+        ct = cycle_time.run_benchmark(full=args.full)
+        for r in ct:
+            rows.append((r["name"], r["us_per_call"], r["derived"]))
+
+    # ------------------------------------------------------------------
+    # Per-op microbenchmarks (PER sampling, C51 projection) — recorded
+    # ------------------------------------------------------------------
+    if "per_ops" in sections:
+        from benchmarks import c51_projection, per_sampling
+        caps = "1024,16384,262144" if args.full else "1024,16384"
+        batches = "32,256,2048" if args.full else "32,256"
+        print(f"\n# PER sampling (caps {caps})", flush=True)
+        for r in per_sampling.main(["--capacities", caps]):
+            rows.append((f"per_sample_cap{r['capacity']}_{r['sampler']}",
+                         r["us_per_call"], f"sampler={r['sampler']}"))
+        print(f"\n# C51 projection (batches {batches})", flush=True)
+        for r in c51_projection.main(["--batches", batches]):
+            rows.append((f"c51_proj_b{r['batch']}_{r['backend']}",
+                         r["us_per_call"], f"atoms={r['atoms']}"))
 
     # ------------------------------------------------------------------
     print("\nname,us_per_call,derived")

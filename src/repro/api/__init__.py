@@ -17,10 +17,12 @@ from repro.api.spec import (AlgoSpec, CheckpointSpec, ExperimentSpec,
                             ScheduleSpec, SpecCompatError,
                             check_resume_compat, load_run_spec,
                             save_run_spec, spec_compat_diff)
-from repro.api.trainers import (TRAINERS, Trainer, build_trainer,
-                                register_trainer)
+from repro.api.trainers import (TRAINERS, Trainer, build_packed_fleet,
+                                build_trainer, register_trainer)
 from repro.api.serve import (LoadedPolicy, POLICIES, PolicyServer,
                              ServeSpec, load_policy, make_server)
+from repro.api.sweep import (Fleet, MANIFEST_FILENAME, SweepRun, SweepSpec,
+                             expand, pack, run_sweep, sweep_compat_diff)
 
 __all__ = [
     # spec surface
@@ -35,4 +37,8 @@ __all__ = [
     # holds the simulated-client harness)
     "ServeSpec", "PolicyServer", "LoadedPolicy", "POLICIES",
     "load_policy", "make_server",
+    # sweep surface (a sweep is a list of specs; docs/sweeps.md)
+    "SweepSpec", "SweepRun", "Fleet", "MANIFEST_FILENAME",
+    "expand", "pack", "run_sweep", "sweep_compat_diff",
+    "build_packed_fleet",
 ]

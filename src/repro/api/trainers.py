@@ -69,8 +69,9 @@ from repro.core.concurrent import (EVAL_STREAM_TAG, TrainerCarry,
                                    make_concurrent_cycle, prepopulate,
                                    replica_key)
 from repro.core.population import (eval_keys, make_population_cycle,
-                                   make_replica_init, population_evaluate,
-                                   population_init, replica_mesh, seed_array)
+                                   make_replica_init, packed_seeds,
+                                   population_evaluate, population_init,
+                                   replica_mesh, seed_array)
 from repro.core.replay import replay_init
 from repro.core.synchronized import evaluate, sampler_init
 from repro.envs import make_env
@@ -79,7 +80,7 @@ from repro.models.nature_cnn import q_forward, q_init, q_logits
 from repro.optim import adamw, centered_rmsprop
 
 __all__ = ["Trainer", "TRAINERS", "register_trainer", "build_trainer",
-           "EVAL_STREAM_TAG"]
+           "build_packed_fleet", "EVAL_STREAM_TAG"]
 # EVAL_STREAM_TAG is defined once in core/concurrent.py (population's
 # eval_keys folds the same constant) and re-exported here.
 
@@ -137,6 +138,23 @@ def build_trainer(spec: ExperimentSpec) -> Trainer:
     return factory(spec)
 
 
+def build_packed_fleet(spec: ExperimentSpec, seeds) -> Trainer:
+    """A heterogeneous-seed population fleet — the construction path the
+    sweep packer (repro.api.sweep) uses for a group of runs that differ
+    only in seed. ``spec`` is the shared fleet spec with
+    ``spec.seeds == len(seeds)``; ``seeds`` is the explicit replica-seed
+    list (non-contiguous is fine). Replica r is bitwise-equal to the
+    standalone single-seed run with ``seed = seeds[r]`` — the same
+    population guarantee, with the contiguity assumption removed."""
+    spec.validate()
+    if spec.mode != "population":
+        raise ValueError(
+            f"packed fleets run in population mode (got {spec.mode!r}); "
+            "non-population sweep runs execute as singleton fleets "
+            "through build_trainer")
+    return PopulationTrainer(spec, seeds=seeds)
+
+
 # ---------------------------------------------------------------------------
 # Shared component assembly (the wiring rl_train and dryrun used to
 # duplicate, now derived from the spec exactly once)
@@ -185,12 +203,22 @@ class PopulationTrainer:
     bitwise-equal to the standalone run with seed ``spec.seed + r``
     (tests/test_population.py, tests/test_api.py)."""
 
-    def __init__(self, spec: ExperimentSpec):
+    def __init__(self, spec: ExperimentSpec, seeds=None):
         self.spec = spec
         self.replicas = spec.seeds
         c = _Components(spec)
         self._c = c
-        self.seeds = seed_array(spec.seed, spec.seeds)
+        # ``seeds`` is the sweep packer's hook: an explicit (possibly
+        # non-contiguous) replica-seed list replaces the contiguous
+        # [seed, seed + P) range; everything downstream only consumes
+        # the per-replica seed values.
+        self.seeds = (seed_array(spec.seed, spec.seeds) if seeds is None
+                      else packed_seeds(seeds))
+        if self.seeds.shape[0] != spec.seeds:
+            raise ValueError(
+                f"packed seed list has {self.seeds.shape[0]} entries but "
+                f"spec.seeds={spec.seeds} — the fleet spec must declare "
+                "exactly the packed replica count")
         init_one = make_replica_init(c.env, c.q_init, c.qf, c.opt, c.dcfg,
                                      c.obs)
         self._init = lambda: population_init(init_one, self.seeds)

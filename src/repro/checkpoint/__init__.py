@@ -1,3 +1,4 @@
 from repro.checkpoint.ckpt import (save_checkpoint, restore_checkpoint,  # noqa: F401
                                    restore_latest, latest_step, list_steps,
+                                   prune_steps, trim_metrics_jsonl,
                                    RESTORE_ERRORS)

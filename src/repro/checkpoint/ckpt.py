@@ -21,6 +21,7 @@ just a resume convenience — see docs/serving.md):
 
 from __future__ import annotations
 
+import json
 import os
 import re
 import tempfile
@@ -150,6 +151,59 @@ def list_steps(ckpt_dir: str) -> List[int]:
 def latest_step(ckpt_dir: str) -> Optional[int]:
     steps = list_steps(ckpt_dir)
     return steps[-1] if steps else None
+
+
+def prune_steps(ckpt_dir: str, keep_last: int = 1) -> List[str]:
+    """Delete all but the newest ``keep_last`` checkpoints and return
+    the removed paths. Sweep fleets checkpoint every few cycles and a
+    large grid would otherwise accumulate every intermediate step on
+    disk; once a fleet completes, only the newest checkpoint(s) matter
+    for resume. Never removes the newest file, so a concurrent
+    ``restore_latest`` always has its first candidate intact."""
+    if keep_last < 1:
+        raise ValueError(f"keep_last must be >= 1, got {keep_last}")
+    removed: List[str] = []
+    for step in list_steps(ckpt_dir)[:-keep_last]:
+        path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+        try:
+            os.unlink(path)
+        except OSError:
+            continue
+        removed.append(path)
+    return removed
+
+
+def trim_metrics_jsonl(path: str, start_cycle: int) -> None:
+    """Drop metrics rows with cycle > start_cycle (plus any torn
+    trailing line an interrupted run left) so a resumed loop never
+    produces two rows per (cycle, replica). The trimmed copy is written
+    to a tmp file in the same directory, fsynced and renamed over the
+    original — an interrupt mid-trim leaves the full history intact.
+    Shared by ``rl_train --resume`` and the sweep runner's per-run
+    metrics files."""
+    kept = []
+    with open(path) as f:
+        for ln in f:
+            try:
+                row = json.loads(ln)
+            except ValueError:
+                continue
+            if row.get("cycle", 0) <= start_cycle:
+                kept.append(ln)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               prefix=".metrics-", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.writelines(kept)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def restore_latest(ckpt_dir: str, template: Any,

@@ -53,7 +53,7 @@ from repro.envs.games import EnvSpec
 from repro.envs.preprocess import as_obs
 
 __all__ = [
-    "seed_array", "make_replica_init", "population_init",
+    "seed_array", "packed_seeds", "make_replica_init", "population_init",
     "make_population_cycle", "population_evaluate", "eval_keys",
     "replica_mesh",
 ]
@@ -62,6 +62,28 @@ __all__ = [
 def seed_array(base_seed: int, n: int) -> jax.Array:
     """The n consecutive replica seeds [base, base + n)."""
     return jnp.int32(base_seed) + jnp.arange(n, dtype=jnp.int32)
+
+
+def packed_seeds(seeds: Sequence[int]) -> jax.Array:
+    """Explicit (possibly non-contiguous) replica seeds — the sweep
+    packer's entry onto the replica axis. A packed fleet trains several
+    sweep runs that differ only in seed as one vmapped program, so the
+    seed list is arbitrary rather than the contiguous ``seed_array``
+    range; every other population guarantee (replica r bitwise-equals
+    the standalone run with ``seeds[r]``) carries over unchanged because
+    ``population_init`` and the cycle only ever consume the per-replica
+    seed value. Duplicates are rejected: two replicas sharing a seed
+    would train bitwise-identical twins, which a sweep manifest must
+    surface as a bug, not silently compute twice."""
+    vals = [int(s) for s in seeds]
+    if not vals:
+        raise ValueError("packed_seeds needs at least one replica seed")
+    dupes = sorted({s for s in vals if vals.count(s) > 1})
+    if dupes:
+        raise ValueError(
+            f"duplicate replica seeds {dupes} in packed fleet — each "
+            "packed run must carry a distinct seed")
+    return jnp.asarray(vals, jnp.int32)
 
 
 def make_replica_init(spec: EnvSpec, q_init_fn: Callable,

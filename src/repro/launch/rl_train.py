@@ -13,6 +13,11 @@
   PYTHONPATH=src python -m repro.launch.rl_train --env pong --seeds 4 \
       --ckpt-dir runs/pong --metrics-jsonl runs/pong/metrics.jsonl --resume
 
+  # a whole sweep (base spec x axis grid) from one manifest; --resume
+  # skips completed runs and restores partial fleets bitwise
+  PYTHONPATH=src python -m repro.launch.rl_train \
+      --sweep examples/specs/catch_lr_seeds_sweep.json --resume
+
 This launcher is a thin shim over ``repro.api``: it resolves
 (spec file → flag overrides) into one `ExperimentSpec`, builds the
 trainer through ``build_trainer`` (the single construction path shared
@@ -52,17 +57,18 @@ import argparse
 import dataclasses
 import json
 import os
-import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.api import (ExperimentSpec, SpecCompatError, build_trainer,
-                       check_resume_compat, load_run_spec, save_run_spec)
+from repro.api import (ExperimentSpec, SpecCompatError, SweepSpec,
+                       build_trainer, check_resume_compat, load_run_spec,
+                       run_sweep, save_run_spec)
 from repro.api.spec import MODES
 from repro.configs.dqn_nature import VARIANTS, get_variant
-from repro.checkpoint import latest_step, restore_latest, save_checkpoint
+from repro.checkpoint import (latest_step, restore_latest, save_checkpoint,
+                              trim_metrics_jsonl)
 
 
 def parse_args(argv=None):
@@ -74,6 +80,12 @@ def parse_args(argv=None):
     ap.add_argument("--spec", default=None, metavar="FILE",
                     help="ExperimentSpec JSON to start from "
                          "(repro.api; flags override its fields)")
+    ap.add_argument("--sweep", default=None, metavar="FILE",
+                    help="SweepSpec manifest (base spec x axis grid; "
+                         "docs/sweeps.md): expand, pack same-except-seed "
+                         "runs into shared fleets, run them all; "
+                         "--ckpt-dir overrides the manifest's root dir, "
+                         "--resume continues a partial sweep")
     ap.add_argument("--print-spec", action="store_true",
                     help="print the fully-resolved spec as canonical "
                          "JSON and exit (commit it, re-run with --spec)")
@@ -197,39 +209,33 @@ def resolve_spec(args) -> ExperimentSpec:
     return spec
 
 
-def _trim_metrics_jsonl(path, start_cycle):
-    """Drop metrics rows with cycle > start_cycle (plus any torn
-    trailing line an interrupted run left) so the resumed loop never
-    produces two rows per (cycle, replica). The trimmed copy is written
-    to a tmp file in the same directory, fsynced and renamed over the
-    original — an interrupt mid-trim leaves the full history intact."""
-    kept = []
-    with open(path) as f:
-        for ln in f:
-            try:
-                row = json.loads(ln)
-            except ValueError:
-                continue
-            if row.get("cycle", 0) <= start_cycle:
-                kept.append(ln)
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
-                               prefix=".metrics-", suffix=".tmp")
+def run_sweep_cli(args) -> int:
+    """--sweep FILE: load the manifest and hand off to the sweep runner
+    (repro.api.sweep). Prints one summary line the CI smoke job greps:
+    resume idempotence means a second --resume pass reports trained=0."""
+    if args.spec:
+        print("--sweep and --spec are mutually exclusive (the manifest "
+              "carries its own base spec)", flush=True)
+        return 2
     try:
-        with os.fdopen(fd, "w") as f:
-            f.writelines(kept)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, path)
-    except BaseException:
-        try:
-            os.unlink(tmp)
-        except OSError:
-            pass
-        raise
+        with open(args.sweep) as f:
+            sweep = SweepSpec.from_json(f.read())
+        results = run_sweep(sweep, resume=args.resume,
+                            root=args.ckpt_dir or None)
+    except (SpecCompatError, ValueError) as e:
+        print(f"sweep failed: {e}", flush=True)
+        return 2
+    trained = sum(1 for r in results if not r["skipped"])
+    skipped = len(results) - trained
+    print(f"SWEEP OK runs={len(results)} trained={trained} "
+          f"skipped={skipped}", flush=True)
+    return 0
 
 
 def main(argv=None):
     args = parse_args(argv)
+    if args.sweep:
+        return run_sweep_cli(args)
     try:
         spec = resolve_spec(args)
     except ValueError as e:
@@ -296,7 +302,7 @@ def main(argv=None):
         os.makedirs(os.path.dirname(spec.metrics.jsonl) or ".",
                     exist_ok=True)
         if os.path.exists(spec.metrics.jsonl):
-            _trim_metrics_jsonl(spec.metrics.jsonl, start_cycle)
+            trim_metrics_jsonl(spec.metrics.jsonl, start_cycle)
         metrics_f = open(spec.metrics.jsonl, "a", buffering=1)
 
     def emit(i, m, evals=None):

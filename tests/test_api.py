@@ -419,14 +419,27 @@ def test_rl_train_spec_file_bitwise_equals_flag_run(tmp_path, monkeypatch):
 # ---------------------------------------------------------------------------
 
 def test_golden_specs_canonical_and_buildable():
+    from repro.api import SweepSpec, expand, pack
     paths = sorted(glob.glob(os.path.join(REPO, "examples", "specs",
                                           "*.json")))
     assert paths, "examples/specs/ must hold committed golden specs"
+    sweeps = 0
     for path in paths:
         with open(path) as f:
             text = f.read()
+        if "axes" in json.loads(text):
+            # sweep manifests live beside the run specs and hold the
+            # same canonical-byte guarantee; buildability = the grid
+            # expands, validates and packs
+            sweep = SweepSpec.from_json(text)
+            assert sweep.to_json() == text, f"{path} is not canonical"
+            runs = expand(sweep)
+            assert runs and pack(runs)
+            sweeps += 1
+            continue
         spec = ExperimentSpec.from_json(text)
         assert spec.to_json() == text, f"{path} is not canonical"
         trainer = build_trainer(spec)
         want = spec.seeds if spec.mode == "population" else 1
         assert trainer.replicas == want
+    assert sweeps, "examples/specs/ must hold a committed sweep manifest"

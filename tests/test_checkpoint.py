@@ -187,8 +187,9 @@ def test_metrics_trim_is_atomic(tmp_path, monkeypatch):
     """Resume-time JSONL trimming rewrites via tmp+rename: rows past the
     resume cycle (and torn trailing lines) are dropped, and a crash
     mid-trim leaves the ORIGINAL history intact — the pre-fix
-    truncating open(..., "w") lost the whole file."""
-    from repro.launch.rl_train import _trim_metrics_jsonl
+    truncating open(..., "w") lost the whole file. (Moved from rl_train
+    into repro.checkpoint so the sweep runner shares it.)"""
+    from repro.checkpoint import trim_metrics_jsonl
 
     path = str(tmp_path / "metrics.jsonl")
     rows = [json.dumps({"cycle": c, "loss": 0.1 * c}) + "\n"
@@ -196,7 +197,7 @@ def test_metrics_trim_is_atomic(tmp_path, monkeypatch):
     with open(path, "w") as f:
         f.writelines(rows)
         f.write('{"cycle": 6, "loss"')              # torn trailing line
-    _trim_metrics_jsonl(path, 3)
+    trim_metrics_jsonl(path, 3)
     with open(path) as f:
         kept = [json.loads(ln) for ln in f]
     assert [r["cycle"] for r in kept] == [1, 2, 3]
@@ -208,9 +209,30 @@ def test_metrics_trim_is_atomic(tmp_path, monkeypatch):
 
     monkeypatch.setattr(os, "replace", boom)
     with pytest.raises(OSError, match="crash mid-trim"):
-        _trim_metrics_jsonl(path, 1)
+        trim_metrics_jsonl(path, 1)
     assert open(path).read() == original            # history survives
     assert os.listdir(tmp_path) == ["metrics.jsonl"]  # no tmp debris
+
+
+def test_prune_steps_keeps_newest(tmp_path):
+    """Fleet-dir housekeeping: prune removes all but the newest
+    ``keep_last`` checkpoints, returns the removed paths, never touches
+    the newest file, and is a no-op on dirs at/below the floor."""
+    from repro.checkpoint import prune_steps
+
+    d = str(tmp_path / "ckpt")
+    for step in (1, 2, 5, 9):
+        save_checkpoint(d, step, {"w": jnp.full((2,), float(step))})
+    removed = prune_steps(d, keep_last=2)
+    assert [os.path.basename(p) for p in removed] == [
+        "step_00000001.npz", "step_00000002.npz"]
+    assert list_steps(d) == [5, 9]
+    got = restore_checkpoint(d, 9, {"w": jnp.zeros((2,))})
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.full((2,), 9.0))
+    assert prune_steps(d, keep_last=2) == []       # idempotent at the floor
+    assert prune_steps(str(tmp_path / "missing")) == []
+    with pytest.raises(ValueError, match="keep_last"):
+        prune_steps(d, keep_last=0)
 
 
 def test_restore_onto_shardings(tmp_path):

@@ -1,0 +1,433 @@
+"""Sweep-layer guarantees (repro.api.sweep; docs/sweeps.md):
+
+1. **expansion contract** (property-tested): expanded count equals the
+   product of axis lengths; ordering is deterministic (sorted axis
+   names, values in listed order) and insertion-stable; every expanded
+   spec survives the canonical-JSON round-trip byte-for-byte and passes
+   ``validate()``;
+2. **packing contract** (property-tested): the packer never merges two
+   runs whose seed-aligned ``spec_compat_diff`` is non-empty, and only
+   single-seed population runs pack at all;
+3. a packed fleet's replicas are **bitwise-equal** to the independent
+   single-seed ``build_trainer`` runs they replace (non-contiguous
+   seeds — the ``packed_seeds`` hook);
+4. a sweep interrupted mid-fleet (with the newest checkpoint torn on
+   top) resumes from its manifest: completed runs are skipped, the torn
+   fleet walks down to the previous step, and every final artifact
+   (carry, result.json, metrics.jsonl) is bitwise-identical to the
+   uninterrupted sweep; a mutated manifest fails with a field-level
+   diff.
+
+Property tests fuzz with hypothesis when it is installed; otherwise the
+same ``@given`` strategies expand into a small deterministic
+parametrized sweep (the tests/test_envs.py degradation)."""
+
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    class _Examples:
+        """A strategy degraded to a finite example list."""
+        def __init__(self, vals):
+            self.vals = list(vals)
+
+    class st:                                    # noqa: N801
+        @staticmethod
+        def sampled_from(xs):
+            return _Examples(xs)
+
+        @staticmethod
+        def integers(lo, hi):
+            return _Examples(sorted({lo, (lo + hi) // 2, hi}))
+
+    def settings(**kw):
+        return lambda f: f
+
+    def given(**strats):
+        keys = sorted(strats)
+        n = max(len(strats[k].vals) for k in keys)
+        combos = [tuple(strats[k].vals[i % len(strats[k].vals)]
+                        for k in keys) for i in range(n)]
+        if len(keys) == 1:
+            combos = [c[0] for c in combos]      # single-param parametrize
+        def deco(f):
+            return pytest.mark.parametrize(",".join(keys), combos)(f)
+        return deco
+
+from repro.api import (AlgoSpec, CheckpointSpec, ExperimentSpec,
+                       ScheduleSpec, SpecCompatError, SweepSpec,
+                       build_packed_fleet, build_trainer, expand, pack,
+                       run_sweep, spec_compat_diff, sweep_compat_diff)
+from repro.api.sweep import load_manifest, save_manifest
+from repro.core.population import packed_seeds
+
+# tiny-but-real base: identical sizing philosophy to tests/test_api.py
+# (the "tiny" net compiles in seconds, 16-step cycles keep scans short);
+# net="auto" so an obs_mode axis can resolve a net per grid point
+TINY_BASE = ExperimentSpec(
+    mode="population", env="catch", envs=4, frame_size=10, net="auto",
+    seeds=1,
+    schedule=ScheduleSpec(cycles=2, cycle_steps=16, prepopulate=32,
+                          eval_every=1, eval_episodes=4),
+    algo=AlgoSpec(minibatch_size=8, replay_capacity=128, train_period=4,
+                  eps_anneal_steps=1000),
+    checkpoint=CheckpointSpec(every=1))
+
+
+def _sweep(axes, base=TINY_BASE, dir=""):
+    return SweepSpec(dir=dir, base=base, axes=axes)
+
+
+def _assert_replica_equals(pop_tree, r, single_tree):
+    """Leaf-by-leaf: pop_tree[leaf][r] == single_tree[leaf][0], bitwise
+    (the tests/test_population.py predicate)."""
+    lp = jax.tree_util.tree_leaves(pop_tree)
+    ls = jax.tree_util.tree_leaves(single_tree)
+    assert len(lp) == len(ls)
+    for p, s in zip(lp, ls):
+        np.testing.assert_array_equal(np.asarray(p)[r], np.asarray(s)[0])
+
+
+# ---------------------------------------------------------------------------
+# 1. expansion: count, ordering, round-trip (property-tested)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n_seeds=st.integers(1, 4), n_lr=st.integers(1, 3),
+       n_cycles=st.integers(1, 2))
+def test_expand_count_is_axis_product(n_seeds, n_lr, n_cycles):
+    sw = _sweep({"seed": list(range(n_seeds)),
+                 "lr": [1e-3 * (i + 1) for i in range(n_lr)],
+                 "schedule.cycles": [2 * (i + 1) for i in range(n_cycles)]})
+    runs = expand(sw)
+    assert len(runs) == n_seeds * n_lr * n_cycles
+    # ids are unique and carry the grid coordinates
+    assert len({r.id for r in runs}) == len(runs)
+    for r in runs:
+        assert r.axis_values["lr"] == r.spec.algo.learning_rate
+        assert r.axis_values["seed"] == r.spec.seed
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_seeds=st.integers(2, 4))
+def test_expand_ordering_deterministic_and_insertion_stable(n_seeds):
+    """Sorted axis names iterate the product (last axis fastest), each
+    axis's values in their LISTED order — so re-expanding is a no-op and
+    reversing a value list exactly reverses that axis's sweep order."""
+    seeds = list(range(10, 10 + n_seeds))
+    lrs = [1e-3, 5e-4]
+    sw = _sweep({"seed": seeds, "lr": lrs})
+    runs = expand(sw)
+    # sorted names = ["lr", "seed"]: lr outer, seed inner
+    want = [(lr, s) for lr in lrs for s in seeds]
+    assert [(r.axis_values["lr"], r.axis_values["seed"])
+            for r in runs] == want
+    # deterministic: same sweep, same list (ids, specs, order)
+    again = expand(_sweep({"seed": seeds, "lr": lrs}))
+    assert [(r.id, r.spec) for r in again] == [(r.id, r.spec) for r in runs]
+    # insertion-stable: reversing the seed list reverses only the inner
+    # iteration, not the grid membership
+    rev = expand(_sweep({"seed": seeds[::-1], "lr": lrs}))
+    assert [r.axis_values["seed"] for r in rev[:n_seeds]] == seeds[::-1]
+    assert sorted(r.spec.to_json() for r in rev) == \
+        sorted(r.spec.to_json() for r in runs)
+
+
+# one axis per grammar family; values intentionally include ints where
+# the target field is float (the coercion must keep round-trips exact)
+AXIS_CASES = {
+    "seed": [0, 7, 13],
+    "lr": [1e-3, 1],                         # int for float field
+    "algo.discount": [0.9, 1],               # nested + coercion
+    "schedule.cycles": [2, 4],
+    "variant": ["dqn", "double"],
+    "env": ["catch", "pong"],
+    "obs_mode": ["pixels", "vector"],
+    "env_params": [{}, {"size": 10}],
+}
+
+
+@settings(max_examples=16, deadline=None)
+@given(axis=st.sampled_from(sorted(AXIS_CASES)),
+       seed_lo=st.integers(0, 50))
+def test_expanded_specs_round_trip_and_validate(axis, seed_lo):
+    axes = {axis: AXIS_CASES[axis]}
+    if axis != "seed":
+        axes["seed"] = [seed_lo, seed_lo + 1]
+    for run in expand(_sweep(axes)):
+        run.spec.validate()                      # every grid point is legal
+        text = run.spec.to_json()
+        back = ExperimentSpec.from_json(text)
+        assert back == run.spec                  # lossless
+        assert back.to_json() == text            # canonical byte-identity
+
+
+def test_sweep_manifest_round_trip():
+    sw = _sweep({"seed": [3, 7], "lr": [1e-3, 5e-4]}, dir="runs/sweep")
+    text = sw.to_json()
+    back = SweepSpec.from_json(text)
+    assert back == sw
+    assert back.to_json() == text
+    # expansion commutes with the round-trip
+    assert [(r.id, r.spec) for r in expand(back)] == \
+        [(r.id, r.spec) for r in expand(sw)]
+
+
+def test_no_axes_expands_to_base():
+    runs = expand(_sweep({}))
+    assert len(runs) == 1 and runs[0].spec.seed == TINY_BASE.seed
+
+
+def test_axis_grammar_rejections():
+    with pytest.raises(ValueError, match="no field"):
+        expand(_sweep({"learning_rate": [1e-3]}))       # needs algo. or lr
+    with pytest.raises(ValueError, match="runner owns"):
+        expand(_sweep({"checkpoint.every": [1, 2]}))
+    with pytest.raises(ValueError, match="runner owns"):
+        expand(_sweep({"metrics": [None]}))
+    with pytest.raises(ValueError, match="both target"):
+        expand(_sweep({"lr": [1e-3], "algo.learning_rate": [5e-4]}))
+    with pytest.raises(ValueError, match="at least one value"):
+        expand(_sweep({"seed": []}))
+    with pytest.raises(ValueError, match="duplicate grid point"):
+        expand(_sweep({"seed": [0, 0]}))
+    with pytest.raises(ValueError, match="preset names"):
+        expand(_sweep({"variant": [7]}))
+    with pytest.raises(ValueError, match="no field"):
+        expand(_sweep({"schedule.cyclez": [2]}))
+
+
+def test_expanded_specs_clear_output_paths():
+    base = dataclasses.replace(
+        TINY_BASE, checkpoint=CheckpointSpec(dir="elsewhere", every=3))
+    for run in expand(_sweep({"seed": [0, 1]}, base=base)):
+        assert run.spec.checkpoint.dir is None   # runner owns the paths
+        assert run.spec.metrics.jsonl is None
+        assert run.spec.checkpoint.every == 3    # cadence survives
+
+
+# ---------------------------------------------------------------------------
+# 2. packing: only same-except-seed population runs share a fleet
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(n_seeds=st.integers(1, 4), n_lr=st.integers(1, 3))
+def test_pack_groups_by_everything_but_seed(n_seeds, n_lr):
+    runs = expand(_sweep({"seed": list(range(n_seeds)),
+                          "lr": [1e-3 * (i + 1) for i in range(n_lr)]}))
+    fleets = pack(runs)
+    assert len(fleets) == n_lr                   # one fleet per lr value
+    assert sum(len(f.members) for f in fleets) == len(runs)
+    for fleet in fleets:
+        assert fleet.seeds == tuple(m.spec.seed for m in fleet.members)
+        assert fleet.spec.seeds == len(fleet.members)
+        assert fleet.packed == (len(fleet.members) > 1)
+        # the packing invariant: seed-aligned compat diff is empty for
+        # every member pair — a fleet is ONE program over many seeds
+        a = fleet.members[0].spec
+        for m in fleet.members[1:]:
+            assert spec_compat_diff(
+                a, dataclasses.replace(m.spec, seed=a.seed)) == []
+
+
+def test_pack_never_merges_incompatible_specs():
+    runs = expand(_sweep({"seed": [0, 1], "env": ["catch", "pong"]}))
+    fleets = pack(runs)
+    assert len(fleets) == 2                      # one per env, never across
+    for fleet in fleets:
+        envs = {m.spec.env for m in fleet.members}
+        assert len(envs) == 1
+
+
+def test_pack_only_single_seed_population_runs():
+    # baseline mode: every run is its own singleton fleet
+    base = dataclasses.replace(TINY_BASE, mode="baseline")
+    fleets = pack(expand(_sweep({"seed": [0, 1]}, base=base)))
+    assert [f.packed for f in fleets] == [False, False]
+    # a base that is ALREADY a multi-seed population keeps its geometry
+    base = dataclasses.replace(TINY_BASE, seeds=3)
+    fleets = pack(expand(_sweep({"seed": [0, 10]}, base=base)))
+    assert [f.packed for f in fleets] == [False, False]
+    assert all(f.spec.seeds == 3 for f in fleets)
+
+
+def test_packed_seeds_validation():
+    assert list(np.asarray(packed_seeds([7, 3, 11]))) == [7, 3, 11]
+    with pytest.raises(ValueError, match="at least one"):
+        packed_seeds([])
+    with pytest.raises(ValueError, match="duplicate"):
+        packed_seeds([3, 7, 3])
+    with pytest.raises(ValueError, match="population mode"):
+        build_packed_fleet(
+            dataclasses.replace(TINY_BASE, mode="concurrent"), [0])
+    with pytest.raises(ValueError, match="packed replica count"):
+        build_packed_fleet(TINY_BASE, [3, 7])    # spec.seeds == 1
+
+
+# ---------------------------------------------------------------------------
+# 3. packed fleet == independent single-seed runs, bitwise
+# ---------------------------------------------------------------------------
+
+def test_packed_fleet_bitwise_equals_standalone_runs():
+    """Acceptance: a packed 2-run fleet with NON-contiguous seeds [3, 7]
+    matches, replica by replica, the independent seeds=1 build_trainer
+    runs the sweep would otherwise launch — carry and eval, bitwise."""
+    seeds = [3, 7]
+    fleet = build_packed_fleet(
+        dataclasses.replace(TINY_BASE, net="tiny", seeds=len(seeds)), seeds)
+    carry = fleet.init_carry()
+    for _ in range(2):
+        carry, _ = fleet.cycle(carry)
+    ev = np.asarray(fleet.eval(carry, fleet.eval_key(1)))
+
+    for r, seed in enumerate(seeds):
+        single = build_trainer(
+            dataclasses.replace(TINY_BASE, net="tiny", seed=seed))
+        c = single.init_carry()
+        for _ in range(2):
+            c, _ = single.cycle(c)
+        _assert_replica_equals(carry.params, r, c.params)
+        _assert_replica_equals(carry.replay, r, c.replay)
+        _assert_replica_equals(carry.sampler, r, c.sampler)
+        _assert_replica_equals(carry.opt_state, r, c.opt_state)
+        np.testing.assert_array_equal(
+            ev[r], np.asarray(single.eval(c, single.eval_key(1)))[0])
+
+
+# ---------------------------------------------------------------------------
+# 4. run_sweep: manifest, interruption, torn checkpoint, bitwise resume
+# ---------------------------------------------------------------------------
+
+def _npz_arrays(path):
+    with np.load(path) as data:
+        return {k: data[k] for k in data.files}
+
+
+def _assert_run_dirs_equal(a_root, b_root, run_id, cycles):
+    a, b = (os.path.join(r, "runs", run_id) for r in (a_root, b_root))
+    assert json.load(open(os.path.join(a, "result.json"))) == \
+        json.load(open(os.path.join(b, "result.json")))
+    assert open(os.path.join(a, "metrics.jsonl")).read() == \
+        open(os.path.join(b, "metrics.jsonl")).read()
+    fn = f"step_{cycles:08d}.npz"
+    xa = _npz_arrays(os.path.join(a, fn))
+    xb = _npz_arrays(os.path.join(b, fn))
+    assert sorted(xa) == sorted(xb)
+    for k in xa:                                 # carries compare bitwise
+        np.testing.assert_array_equal(xa[k], xb[k])
+
+
+def test_sweep_interrupt_torn_checkpoint_resume_bitwise(tmp_path):
+    """Acceptance: interrupt a sweep mid-second-fleet, tear the newest
+    checkpoint on top, resume from the manifest — the first fleet's runs
+    are skipped, the torn fleet walks down one step and replays, and
+    every final artifact is bitwise-identical to the uninterrupted
+    sweep. A second resume is a no-op; a mutated manifest fails with a
+    field-level diff."""
+    base = dataclasses.replace(
+        TINY_BASE, net="tiny",
+        schedule=dataclasses.replace(TINY_BASE.schedule, cycles=3))
+    sw = _sweep({"seed": [3, 7], "lr": [1e-3, 5e-4]}, base=base)
+    runs = expand(sw)
+    cycles = base.schedule.cycles
+
+    a_root, b_root = str(tmp_path / "straight"), str(tmp_path / "resumed")
+    res_a = run_sweep(sw, root=a_root)
+    assert [r["skipped"] for r in res_a] == [False] * 4
+
+    # interrupt the SECOND fleet after its cycle-2 checkpoint lands
+    class Stop(Exception):
+        pass
+
+    def bomb(fleet_id, cycle):
+        if fleet_id.startswith("fleet001") and cycle == 2:
+            raise Stop()
+
+    with pytest.raises(Stop):
+        run_sweep(sw, root=b_root, on_cycle=bomb)
+
+    fdir = os.path.join(b_root, "fleets", "fleet001-p2")
+    steps = sorted(f for f in os.listdir(fdir) if f.endswith(".npz"))
+    assert steps == ["step_00000001.npz", "step_00000002.npz"]
+    with open(os.path.join(fdir, steps[-1]), "r+b") as f:
+        f.truncate(57)                           # torn: crash mid-write
+
+    # fresh-dir guard: re-running without resume refuses
+    with pytest.raises(SpecCompatError, match="--resume"):
+        run_sweep(sw, root=b_root)
+
+    res_b = run_sweep(sw, root=b_root, resume=True)
+    by_id = {r["run"]: r for r in res_b}
+    # fleet000's two runs completed before the interrupt -> skipped
+    skipped = [r.id for r in runs if by_id[r.id]["skipped"]]
+    assert len(skipped) == 2
+    for run, ra in zip(runs, res_a):
+        assert {k: by_id[run.id][k] for k in ra if k != "skipped"} == \
+            {k: ra[k] for k in ra if k != "skipped"}
+        _assert_run_dirs_equal(a_root, b_root, run.id, cycles)
+
+    # resume idempotence: everything skipped, nothing retrained
+    res_c = run_sweep(sw, root=b_root, resume=True)
+    assert all(r["skipped"] for r in res_c)
+
+    # a mutated manifest must fail with the differing field named
+    mutated = dataclasses.replace(sw, axes={"seed": [3, 7],
+                                            "lr": [1e-3, 1e-4]})
+    with pytest.raises(SpecCompatError, match="axes.lr"):
+        run_sweep(mutated, root=b_root, resume=True)
+    mutated_base = dataclasses.replace(
+        sw, base=dataclasses.replace(base, frame_size=84))
+    with pytest.raises(SpecCompatError, match="base.frame_size"):
+        run_sweep(mutated_base, root=b_root, resume=True)
+
+
+def test_sweep_compat_diff_and_manifest_io(tmp_path):
+    sw = _sweep({"seed": [0, 1]}, dir="runs/sw")
+    assert sweep_compat_diff(sw, sw) == []
+    # dir is an output path, not an identity field
+    assert sweep_compat_diff(
+        sw, dataclasses.replace(sw, dir="elsewhere")) == []
+    diff = sweep_compat_diff(
+        sw, dataclasses.replace(sw, axes={"seed": [0, 2]}))
+    assert len(diff) == 1 and diff[0].startswith("axes.seed")
+
+    root = str(tmp_path / "sw")
+    assert load_manifest(root) is None
+    save_manifest(root, sw)
+    assert load_manifest(root) == sw
+    with open(os.path.join(root, "sweep.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(SpecCompatError, match="unreadable"):
+        load_manifest(root)
+
+
+def test_run_sweep_requires_root():
+    with pytest.raises(ValueError, match="root directory"):
+        run_sweep(_sweep({"seed": [0]}))
+
+
+# ---------------------------------------------------------------------------
+# 5. the CLI shim
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_rl_train_sweep_cli_and_resume_idempotence(tmp_path, capsys):
+    from repro.launch import rl_train
+
+    manifest = tmp_path / "sweep.json"
+    manifest.write_text(_sweep({"seed": [3, 7]},
+                               dir=str(tmp_path / "out")).to_json())
+    assert rl_train.main(["--sweep", str(manifest)]) == 0
+    assert "trained=2 skipped=0" in capsys.readouterr().out
+    assert rl_train.main(["--sweep", str(manifest), "--resume"]) == 0
+    assert "trained=0 skipped=2" in capsys.readouterr().out
+    # mutually exclusive with --spec; errors surface as exit code 2
+    assert rl_train.main(["--sweep", str(manifest), "--spec", "x.json"]) == 2
+    assert rl_train.main(["--sweep", str(manifest)]) == 2   # needs --resume
