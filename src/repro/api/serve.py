@@ -49,6 +49,7 @@ import numpy as np
 from repro.api.spec import ExperimentSpec, load_run_spec
 from repro.core.policy import policy_step
 from repro.envs.preprocess import ObsPipeline, push_frame
+from repro.telemetry import NullTracer
 
 __all__ = ["POLICIES", "ServeSpec", "PolicyServer", "LoadedPolicy",
            "load_policy", "make_server"]
@@ -123,8 +124,14 @@ class PolicyServer:
 
     def __init__(self, params, q_forward: Callable, pipe: ObsPipeline,
                  frame_stack: int, n_actions: int,
-                 serve: ServeSpec = ServeSpec()):
+                 serve: ServeSpec = ServeSpec(), tracer=None):
         serve.validate()
+        # telemetry (repro.telemetry): each flush records a serve.flush
+        # span with per-microbatch serve.queue_wait (oldest submit ->
+        # flush start: the latency the batching window itself adds) and
+        # serve.compute (the jitted call through device sync) children.
+        # The default NullTracer keeps the request path zero-cost.
+        self.tracer = tracer if tracer is not None else NullTracer()
         self.params = params
         self.pipe = pipe
         self.frame_stack = frame_stack
@@ -227,10 +234,29 @@ class PolicyServer:
                      if self._noisy else None)
         out: Dict[Any, int] = {}
         mb = self.serve.max_batch
-        for lo in range(0, len(queue), mb):
-            chunk = queue[lo: lo + mb]
-            B = len(chunk)
-            bucket = self._bucket_for(B)
+        with self.tracer.span("serve.flush", tick=self._tick,
+                              requests=len(queue)):
+            for lo in range(0, len(queue), mb):
+                chunk = queue[lo: lo + mb]
+                self._serve_chunk(chunk, keys, lo, noise_key, out)
+            self.tracer.count("serve.actions", len(queue))
+        self._tick += 1
+        return out
+
+    def _serve_chunk(self, chunk, keys, lo: int, noise_key,
+                     out: Dict[Any, int]) -> None:
+        """One microbatch: pad to a bucket, run the jitted program,
+        scatter actions back. Telemetry: a ``serve.queue_wait`` span
+        (oldest submit -> compute start: the latency the batching
+        window itself added) then a ``serve.compute`` span fenced on
+        the device sync."""
+        B = len(chunk)
+        bucket = self._bucket_for(B)
+        if self.tracer.enabled and chunk:
+            self.tracer.complete("serve.queue_wait",
+                                 min(t0 for *_x, t0 in chunk),
+                                 time.perf_counter(), batch=B)
+        with self.tracer.span("serve.compute", batch=B, bucket=bucket):
             obs = np.zeros((bucket,) + self.pipe.shape, self.pipe.dtype)
             first = np.zeros((bucket,), bool)
             slots = np.full((bucket,), self._cap, np.int32)  # OOB = pad
@@ -259,13 +285,11 @@ class PolicyServer:
                 jnp.asarray(obs), jnp.asarray(first), self._eps, kchunk,
                 noise_key)
             acts = np.asarray(actions)        # device sync: batch served
-            done_t = time.perf_counter()
-            for i, (sid, slot, _ob, _fr, t0) in enumerate(chunk):
-                out[sid] = int(acts[i])
-                self._steps[slot] += 1
-                self._latencies.append(done_t - t0)
-        self._tick += 1
-        return out
+        done_t = time.perf_counter()
+        for i, (sid, slot, _ob, _fr, t0) in enumerate(chunk):
+            out[sid] = int(acts[i])
+            self._steps[slot] += 1
+            self._latencies.append(done_t - t0)
 
     # -- operations --------------------------------------------------------
 
@@ -361,14 +385,17 @@ def load_policy(ckpt_dir: str, spec: Optional[ExperimentSpec] = None,
                         c.env.n_actions, step, skipped)
 
 
-def make_server(loaded: LoadedPolicy,
-                serve: ServeSpec = ServeSpec()) -> PolicyServer:
+def make_server(loaded: LoadedPolicy, serve: ServeSpec = ServeSpec(),
+                tracer=None) -> PolicyServer:
     """A :class:`PolicyServer` over a loaded checkpoint (the spec + the
-    carry — nothing else crosses the training/serving boundary)."""
+    carry — nothing else crosses the training/serving boundary).
+    ``tracer`` (repro.telemetry) records queue-wait vs compute spans
+    per flush; None = NullTracer, zero-cost."""
     if serve.policy == "noisy" and not loaded.spec.variant.noisy:
         raise ValueError(
             f"serving policy 'noisy' needs a NoisyNet checkpoint; "
             f"variant {loaded.spec.variant.name!r} has no noise "
             "parameters — use 'greedy' or 'egreedy'")
     return PolicyServer(loaded.params, loaded.q_forward, loaded.pipe,
-                        loaded.frame_stack, loaded.n_actions, serve)
+                        loaded.frame_stack, loaded.n_actions, serve,
+                        tracer=tracer)

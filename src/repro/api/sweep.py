@@ -65,6 +65,7 @@ from repro.api.spec import (_NESTED, CheckpointSpec, ExperimentSpec,
 from repro.api.trainers import build_packed_fleet, build_trainer
 from repro.checkpoint import (prune_steps, restore_latest, save_checkpoint,
                               trim_metrics_jsonl)
+from repro.telemetry import JsonlSink, NullTracer, Tracer
 
 __all__ = [
     "SweepSpec", "SweepRun", "Fleet", "MANIFEST_FILENAME",
@@ -426,8 +427,8 @@ def _load_result(root: str, run: SweepRun) -> Optional[Dict[str, Any]]:
 
 def run_sweep(sweep: SweepSpec, resume: bool = False,
               root: Optional[str] = None,
-              on_cycle: Optional[Callable[[str, int], None]] = None
-              ) -> List[Dict[str, Any]]:
+              on_cycle: Optional[Callable[[str, int], None]] = None,
+              trace: bool = False) -> List[Dict[str, Any]]:
     """Execute (or resume) a sweep; returns one result row per expanded
     run: ``{"run", "fleet", "seed", "cycles", "step", "eval",
     "skipped"}`` in canonical run order.
@@ -438,7 +439,15 @@ def run_sweep(sweep: SweepSpec, resume: bool = False,
     on a D-device host a packed fleet of P runs costs ~P/D standalone
     runs of wall clock. ``on_cycle(fleet_id, cycle)`` fires after each
     cycle's state hits disk (progress hook; raising from it is a clean
-    interrupt — the sweep resumes from exactly that point)."""
+    interrupt — the sweep resumes from exactly that point).
+
+    ``trace=True`` records a phase trace per run under
+    ``runs/<id>/trace.jsonl`` (``rl_train --sweep ... --trace``): the
+    members of a packed fleet share one device program, so each member's
+    trace carries the *fleet's* cycle spans with the member's identity
+    in the header — honest attribution, since that shared wall clock is
+    exactly what the run cost. Traces are diagnostics, not state: a
+    resumed sweep records a fresh trace for the cycles it replays."""
     root = root or sweep.dir
     if not root:
         raise ValueError(
@@ -474,16 +483,35 @@ def run_sweep(sweep: SweepSpec, resume: bool = False,
                 results.append({**done[m.id], "skipped": True})
             continue
         results.extend(_run_fleet(root, fleet, resume=resume,
-                                  on_cycle=on_cycle))
+                                  on_cycle=on_cycle, trace=trace))
     return results
 
 
+def _fleet_tracer(root: str, fleet: Fleet, trace: bool):
+    """One tracer whose span stream lands in every member run's
+    ``trace.jsonl`` (a packed fleet IS one program; the per-sink extra
+    meta records which member each file belongs to)."""
+    if not trace:
+        return NullTracer()
+    sinks = [JsonlSink(os.path.join(_run_dir(root, m.id), "trace.jsonl"),
+                       extra_meta={"run": m.id, "seed": m.spec.seed})
+             for m in fleet.members]
+    return Tracer(sinks, meta={
+        "kind": "sweep_fleet", "fleet": fleet.id, "packed": fleet.packed,
+        "members": len(fleet.members), "env": fleet.spec.env,
+        "variant": fleet.spec.variant.name,
+        "cycles": fleet.spec.schedule.cycles,
+        "cycle_steps": fleet.spec.schedule.cycle_steps})
+
+
 def _run_fleet(root: str, fleet: Fleet, resume: bool,
-               on_cycle: Optional[Callable[[str, int], None]]
-               ) -> List[Dict[str, Any]]:
+               on_cycle: Optional[Callable[[str, int], None]],
+               trace: bool = False) -> List[Dict[str, Any]]:
     fdir = os.path.join(root, "fleets", fleet.id)
-    trainer = (build_packed_fleet(fleet.spec, list(fleet.seeds))
-               if fleet.packed else build_trainer(fleet.spec))
+    tracer = _fleet_tracer(root, fleet, trace)
+    with tracer.span("init", phase="build_trainer"):
+        trainer = (build_packed_fleet(fleet.spec, list(fleet.seeds))
+                   if fleet.packed else build_trainer(fleet.spec))
     sched = fleet.spec.schedule
 
     start_cycle = 0
@@ -494,7 +522,9 @@ def _run_fleet(root: str, fleet: Fleet, resume: bool,
             check_resume_compat(fstored, fleet.spec)
     save_run_spec(fdir, fleet.spec)
     if resume:
-        step, carry, skipped = restore_latest(fdir, trainer.init_template())
+        with tracer.span("init", phase="restore"):
+            step, carry, skipped = restore_latest(fdir,
+                                                  trainer.init_template())
         for s in skipped:
             print(f"[sweep] WARNING: skipped unrestorable checkpoint {s}",
                   flush=True)
@@ -503,7 +533,10 @@ def _run_fleet(root: str, fleet: Fleet, resume: bool,
             print(f"[sweep] {fleet.id}: resumed at cycle {start_cycle}",
                   flush=True)
     if carry is None:
-        carry = trainer.init_carry()
+        with tracer.span("init", phase="init_carry"):
+            carry = trainer.init_carry()
+            if tracer.enabled:
+                tracer.fence(carry)
 
     member_ids = [m.id for m in fleet.members]
     print(f"[sweep] {fleet.id}: cycles {start_cycle}->{sched.cycles} "
@@ -523,32 +556,47 @@ def _run_fleet(root: str, fleet: Fleet, resume: bool,
 
     try:
         evals = None
-        for i in range(start_cycle, sched.cycles):
-            carry, m = trainer.cycle(carry)
-            evals = None
-            if (i + 1) % sched.eval_every == 0 or i == sched.cycles - 1:
-                evals = trainer.eval(carry, trainer.eval_key(i))
-            mh = jax.device_get(m)
-            steps = jax.device_get(trainer.steps(carry))
-            evh = None if evals is None else jax.device_get(evals)
-            for r, (member, mf) in enumerate(zip(fleet.members,
-                                                 metrics_files)):
-                row = {"cycle": i + 1, "run": member.id,
-                       "env": member.spec.env,
-                       "variant": member.spec.variant.name,
-                       "seed": member.spec.seed, "step": int(steps[r]),
-                       "loss": float(mh["loss"][r]),
-                       "reward": float(mh["reward"][r]),
-                       "episodes": float(mh["episodes"][r])}
-                if evh is not None:
-                    row["eval"] = float(evh[r])
-                mf.write(json.dumps(row) + "\n")
-            if (i + 1) % fleet.spec.checkpoint.every == 0 \
-                    or i == sched.cycles - 1:
-                save_checkpoint(fdir, i + 1, carry)
-            if on_cycle is not None:
-                on_cycle(fleet.id, i + 1)
+        with tracer.span("train", start_cycle=start_cycle,
+                         cycles=sched.cycles):
+            for i in range(start_cycle, sched.cycles):
+                with tracer.span("cycle", index=i + 1):
+                    carry, m = trainer.cycle(carry)
+                    if tracer.enabled:
+                        tracer.fence(m)
+                tracer.count("cycles", 1)
+                tracer.count("env_steps",
+                             trainer.replicas * sched.cycle_steps)
+                evals = None
+                if (i + 1) % sched.eval_every == 0 or i == sched.cycles - 1:
+                    with tracer.span("eval", index=i + 1):
+                        evals = trainer.eval(carry, trainer.eval_key(i))
+                        if tracer.enabled:
+                            tracer.fence(evals)
+                with tracer.span("metrics", index=i + 1):
+                    mh = jax.device_get(m)
+                    steps = jax.device_get(trainer.steps(carry))
+                    evh = None if evals is None else jax.device_get(evals)
+                    for r, (member, mf) in enumerate(zip(fleet.members,
+                                                         metrics_files)):
+                        row = {"cycle": i + 1, "run": member.id,
+                               "env": member.spec.env,
+                               "variant": member.spec.variant.name,
+                               "seed": member.spec.seed,
+                               "step": int(steps[r]),
+                               "loss": float(mh["loss"][r]),
+                               "reward": float(mh["reward"][r]),
+                               "episodes": float(mh["episodes"][r])}
+                        if evh is not None:
+                            row["eval"] = float(evh[r])
+                        mf.write(json.dumps(row) + "\n")
+                if (i + 1) % fleet.spec.checkpoint.every == 0 \
+                        or i == sched.cycles - 1:
+                    with tracer.span("checkpoint", index=i + 1):
+                        save_checkpoint(fdir, i + 1, carry)
+                if on_cycle is not None:
+                    on_cycle(fleet.id, i + 1)
     finally:
+        tracer.close()
         for mf in metrics_files:
             mf.close()
 

@@ -69,6 +69,7 @@ from repro.api.spec import MODES
 from repro.configs.dqn_nature import VARIANTS, get_variant
 from repro.checkpoint import (latest_step, restore_latest, save_checkpoint,
                               trim_metrics_jsonl)
+from repro.telemetry import chrome_path_for, make_tracer
 
 
 def parse_args(argv=None):
@@ -137,6 +138,12 @@ def parse_args(argv=None):
                              "mosaic", "triton"],
                     help="segment-tree kernel request for PER variants "
                          "(REPRO_KERNEL_BACKEND env var overrides)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="record a phase trace: JSONL to FILE plus a "
+                         "Chrome/Perfetto twin beside it (summarize "
+                         "with launch/trace_report.py; with --sweep, "
+                         "any value enables per-run traces under "
+                         "runs/<id>/trace.jsonl)")
     ap.add_argument("--dryrun", action="store_true",
                     help="one tiny cycle per stage (CI variant smoke)")
     ap.add_argument("--compute-dtype", default=None,
@@ -221,7 +228,8 @@ def run_sweep_cli(args) -> int:
         with open(args.sweep) as f:
             sweep = SweepSpec.from_json(f.read())
         results = run_sweep(sweep, resume=args.resume,
-                            root=args.ckpt_dir or None)
+                            root=args.ckpt_dir or None,
+                            trace=bool(args.trace))
     except (SpecCompatError, ValueError) as e:
         print(f"sweep failed: {e}", flush=True)
         return 2
@@ -252,7 +260,19 @@ def main(argv=None):
         print(f"invalid spec: {e}", flush=True)
         return 2
 
-    trainer = build_trainer(spec)
+    # With --trace FILE the tracer writes JSONL + a Chrome/Perfetto twin;
+    # without it this is a counter-only tracer (zero writes) so the
+    # throughput lines below work on every run. Tracing is host-side
+    # only — a traced run is bitwise-identical to an untraced one
+    # (tests/test_telemetry.py).
+    tracer = make_tracer(args.trace, meta={
+        "kind": "rl_train", "env": spec.env, "mode": spec.mode,
+        "variant": spec.variant.name, "seeds": spec.seeds,
+        "cycles": spec.schedule.cycles,
+        "cycle_steps": spec.schedule.cycle_steps})
+
+    with tracer.span("init", phase="build_trainer"):
+        trainer = build_trainer(spec)
     sched = spec.schedule
     ckpt_dir = spec.checkpoint.dir
     P = trainer.replicas
@@ -283,8 +303,9 @@ def main(argv=None):
         # A torn checkpoint (crash mid-save on an old layout, partial
         # copy, disk-full) is skipped with a warning and the walk falls
         # back to the newest step that still restores.
-        step, carry, skipped = restore_latest(ckpt_dir,
-                                              trainer.init_template())
+        with tracer.span("init", phase="restore"):
+            step, carry, skipped = restore_latest(ckpt_dir,
+                                                  trainer.init_template())
         for s in skipped:
             print(f"WARNING: skipped unrestorable checkpoint {s}",
                   flush=True)
@@ -295,7 +316,10 @@ def main(argv=None):
             print(f"no restorable checkpoint in {ckpt_dir}; "
                   "starting fresh", flush=True)
     if carry is None:
-        carry = trainer.init_carry()
+        with tracer.span("init", phase="init_carry"):
+            carry = trainer.init_carry()
+            if tracer.enabled:
+                tracer.fence(carry)
 
     metrics_f = None
     if spec.metrics.jsonl:
@@ -324,29 +348,65 @@ def main(argv=None):
             metrics_f.write(json.dumps(row) + "\n")
 
     t0 = time.time()
-    for i in range(start_cycle, sched.cycles):
-        carry, m = trainer.cycle(carry)
-        evals = None
-        if (i + 1) % sched.eval_every == 0 or i == sched.cycles - 1:
-            evals = trainer.eval(carry, trainer.eval_key(i))
-            steps_now = trainer.steps(carry)
-            sps = (int(jnp.sum(steps_now))
-                   - P * start_cycle * sched.cycle_steps) \
-                / max(time.time() - t0, 1e-9)
-            r_mean = float(jnp.mean(evals))
-            r_span = (float(jnp.min(evals)), float(jnp.max(evals)))
-            print(f"[{spec.variant.name}] cycle {i+1:4d} "
-                  f"steps {int(steps_now[0]):7d} x{P} "
-                  f"eval {r_mean:+.2f} [{r_span[0]:+.2f},{r_span[1]:+.2f}] "
-                  f"loss {float(jnp.mean(m['loss'])):.4f} "
-                  f"eps {float(jnp.mean(m['eps'])):.2f} | "
-                  f"{sps:.0f} env-steps/s", flush=True)
-        emit(i, m, evals)
-        if ckpt_dir and ((i + 1) % spec.checkpoint.every == 0
-                         or i == sched.cycles - 1):
-            save_checkpoint(ckpt_dir, i + 1, carry)
-    if metrics_f is not None:
-        metrics_f.close()
+    win_t, win_counters = t0, tracer.counters
+    try:
+        with tracer.span("train", start_cycle=start_cycle,
+                         cycles=sched.cycles):
+            for i in range(start_cycle, sched.cycles):
+                with tracer.span("cycle", index=i + 1):
+                    carry, m = trainer.cycle(carry)
+                    if tracer.enabled:
+                        tracer.fence(m)
+                tracer.count("cycles", 1)
+                tracer.count("env_steps", P * sched.cycle_steps)
+                evals = None
+                if (i + 1) % sched.eval_every == 0 or i == sched.cycles - 1:
+                    with tracer.span("eval", index=i + 1):
+                        evals = trainer.eval(carry, trainer.eval_key(i))
+                        if tracer.enabled:
+                            tracer.fence(evals)
+                    steps_now = trainer.steps(carry)
+                    sps = (int(jnp.sum(steps_now))
+                           - P * start_cycle * sched.cycle_steps) \
+                        / max(time.time() - t0, 1e-9)
+                    r_mean = float(jnp.mean(evals))
+                    r_span = (float(jnp.min(evals)), float(jnp.max(evals)))
+                    print(f"[{spec.variant.name}] cycle {i+1:4d} "
+                          f"steps {int(steps_now[0]):7d} x{P} "
+                          f"eval {r_mean:+.2f} "
+                          f"[{r_span[0]:+.2f},{r_span[1]:+.2f}] "
+                          f"loss {float(jnp.mean(m['loss'])):.4f} "
+                          f"eps {float(jnp.mean(m['eps'])):.2f} | "
+                          f"{sps:.0f} env-steps/s", flush=True)
+                if metrics_f is not None:
+                    with tracer.span("metrics", index=i + 1):
+                        emit(i, m, evals)
+                if ckpt_dir and ((i + 1) % spec.checkpoint.every == 0
+                                 or i == sched.cycles - 1):
+                    with tracer.span("checkpoint", index=i + 1):
+                        save_checkpoint(ckpt_dir, i + 1, carry)
+                if (i + 1) % spec.checkpoint.every == 0 \
+                        or i == sched.cycles - 1:
+                    # per-interval throughput from the tracer counters:
+                    # long runs stay observable without a trace file
+                    now, c = time.time(), tracer.counters
+                    dc = c.get("cycles", 0) - win_counters.get("cycles", 0)
+                    ds = (c.get("env_steps", 0)
+                          - win_counters.get("env_steps", 0))
+                    dt = max(now - win_t, 1e-9)
+                    print(f"[throughput] cycle {i+1:4d}: "
+                          f"{dc / dt:.2f} cycles/s, "
+                          f"{ds / dt:.0f} env-steps/s "
+                          f"(last {int(dc)} cycle(s))", flush=True)
+                    win_t, win_counters = now, c
+    finally:
+        tracer.close()
+        if metrics_f is not None:
+            metrics_f.close()
+    if args.trace:
+        print(f"trace written: {args.trace} (+ Perfetto twin "
+              f"{chrome_path_for(args.trace)}); summarize with "
+              "python -m repro.launch.trace_report", flush=True)
     if args.dryrun:
         print(f"DRYRUN OK variant={spec.variant.name}", flush=True)
     return 0

@@ -34,6 +34,7 @@ import argparse
 from repro.api import ExperimentSpec, ServeSpec, POLICIES
 from repro.api.policy_client import SimulatedClients, drive
 from repro.api.serve import load_policy, make_server
+from repro.telemetry import make_tracer
 
 
 def parse_args(argv=None):
@@ -62,6 +63,10 @@ def parse_args(argv=None):
     ap.add_argument("--warm-start", action="store_true",
                     help="pre-compile every batch bucket + pre-size the "
                          "stream table before serving")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="record queue-wait vs compute spans per flush "
+                         "(JSONL + Perfetto twin; "
+                         "launch/trace_report.py summarizes)")
     ap.add_argument("--smoke", action="store_true",
                     help="assert the round trip and print SERVE OK (CI)")
     return ap.parse_args(argv)
@@ -84,8 +89,12 @@ def main(argv=None):
     serve = ServeSpec(policy=args.policy, eps=args.eps,
                       max_batch=args.max_batch, replica=args.replica,
                       seed=args.seed)
+    tracer = make_tracer(args.trace, meta={
+        "kind": "serve_policy", "env": loaded.spec.env,
+        "variant": loaded.spec.variant.name, "policy": args.policy,
+        "clients": args.clients, "max_batch": args.max_batch})
     try:
-        server = make_server(loaded, serve)
+        server = make_server(loaded, serve, tracer=tracer)
     except ValueError as e:
         print(f"invalid serving config: {e}", flush=True)
         return 2
@@ -99,7 +108,12 @@ def main(argv=None):
 
     clients = SimulatedClients(loaded.spec, args.clients,
                                seed=args.seed + 1)
-    stats = drive(server, clients, args.ticks)
+    try:
+        stats = drive(server, clients, args.ticks)
+    finally:
+        tracer.close()
+    if args.trace:
+        print(f"trace written: {args.trace}", flush=True)
     print(f"{stats['clients']} streams x {stats['ticks']} ticks: "
           f"{stats['actions_per_s']:.0f} actions/s, "
           f"latency p50 {stats['p50_ms']:.2f} ms "

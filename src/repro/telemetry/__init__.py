@@ -1,0 +1,42 @@
+"""Structured runtime observability for the training/serving stack.
+
+The paper's contribution is a *concurrency schedule* — it wins by
+overlapping actor, learner and sync phases so the device never starves —
+so the first requirement of any optimization work (ROADMAP direction 5)
+is being able to see where a cycle's wall clock actually goes. This
+package provides exactly that, host-side and zero-cost when disabled:
+
+* :class:`Tracer` — phase-scoped spans (``with tracer.span("cycle"):``,
+  arbitrarily nested), monotonically-accumulating counters
+  (env-steps, cycles), explicit ``fence()`` = ``block_until_ready``
+  so a span's close is an honest device-complete timestamp, and
+  compile-event capture via ``jax.monitoring`` duration listeners.
+* :class:`NullTracer` — same public API, every method a no-op, so hot
+  paths take a tracer unconditionally and pay nothing when tracing is
+  off (tests/test_telemetry.py locks the API parity).
+* Sinks — :class:`JsonlSink` (append-only JSON lines, the diffable
+  machine format) and :class:`ChromeTraceSink` (Chrome ``trace_event``
+  JSON, loadable in Perfetto / ``chrome://tracing``).
+* :mod:`repro.telemetry.report` — per-phase p50/p95 summaries,
+  compile-vs-steady split, trace-vs-trace diff and trace-vs-committed
+  ``BENCH_<n>.json`` regression checks (CLI:
+  ``python -m repro.launch.trace_report``).
+* :func:`provenance` — git SHA + dirty flag, platform/CPU model,
+  Python/JAX versions; stamped into every trace header and every
+  ``benchmarks/run.py --record`` meta block.
+
+Tracing is strictly host-side: it never enters a jitted program, so a
+traced run is bitwise-identical to an untraced one (locked by test).
+See docs/observability.md for the full contract.
+"""
+
+from repro.telemetry.provenance import provenance
+from repro.telemetry.sinks import ChromeTraceSink, JsonlSink, MemorySink
+from repro.telemetry.tracer import (NullTracer, Tracer, chrome_path_for,
+                                    make_tracer)
+
+__all__ = [
+    "Tracer", "NullTracer", "make_tracer", "chrome_path_for",
+    "JsonlSink", "ChromeTraceSink", "MemorySink",
+    "provenance",
+]
